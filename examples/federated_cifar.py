@@ -1,0 +1,55 @@
+"""The paper's testbed end-to-end: SmartFreeze vs vanilla FL on a synthetic
+CIFAR-like task with 20 heterogeneous clients (Dirichlet non-IID, memory +
+compute heterogeneity). Prints round-by-round accuracy and the stage-freeze
+points, plus the Eq.(4) per-stage memory model.
+
+Run:  PYTHONPATH=src python examples/federated_cifar.py [--rounds-per-stage 8]
+"""
+import argparse
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses
+import jax
+import jax.numpy as jnp
+
+from repro.data.partition import dirichlet_partition
+from repro.data.synthetic import SyntheticVision
+from repro.fl.client import make_client_fleet
+from repro.fl.server import SmartFreezeServer, cnn_stage_memory_bytes
+from repro.models.cnn import CNN, CNNConfig
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--rounds-per-stage", type=int, default=8)
+ap.add_argument("--clients", type=int, default=20)
+args = ap.parse_args()
+
+sv = SyntheticVision(num_classes=10, image_size=16)
+train_data = sv.sample(3000, seed=1)
+test = sv.sample(500, seed=2)
+parts = dirichlet_partition(train_data["y"], args.clients, alpha=1.0, seed=0)
+clients = make_client_fleet(train_data, parts, scenario="low")
+
+cfg = CNNConfig("resnet_mini", "resnet", stage_sizes=(1, 1, 1),
+                stage_channels=(16, 32, 64))
+model = CNN(cfg)
+params, state = model.init(jax.random.PRNGKey(0))
+
+print("Eq.(4) stage memory model (batch 32):")
+for s in range(3):
+    mb = cnn_stage_memory_bytes(model, s, 32) / 2**20
+    print(f"  stage {s}: {mb:7.1f} MiB")
+
+def eval_fn(p, s, stage):
+    logits, _ = model.apply(p, s, jnp.asarray(test["x"]), train=False)
+    return float((jnp.argmax(logits, -1) == jnp.asarray(test["y"])).mean())
+
+srv = SmartFreezeServer(model, clients, clients_per_round=6, local_epochs=1,
+                        batch_size=32, rounds_per_stage=args.rounds_per_stage,
+                        pace_kwargs=dict(min_rounds=4, mu=2, slope_lambda=2e-2))
+out = srv.run(params, state, eval_fn=eval_fn, eval_every=2)
+print(f"\n{out['rounds']} rounds:")
+for rr in out["history"]:
+    acc = f" acc={rr.test_acc:.3f}" if rr.test_acc is not None else ""
+    frz = "  << FROZEN" if rr.frozen else ""
+    print(f"  r{rr.round_idx:3d} stage{rr.stage} loss={rr.loss:.3f}{acc}{frz}")

@@ -1,0 +1,11 @@
+"""Serve a small model with batched requests: greedy decode over a KV cache.
+
+Run:  PYTHONPATH=src python examples/serve_decode.py --arch zamba2-7b
+(any non-encoder arch id works; models are reduced-size for CPU)
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main
+
+main()

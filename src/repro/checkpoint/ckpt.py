@@ -1,0 +1,169 @@
+"""Fault-tolerant checkpointing: atomic, sharded, async, elastic.
+
+Layout:  <dir>/step_<N>/
+            manifest.json      tree structure + shapes/dtypes + metadata
+            <leaf-path>.npy    one file per leaf (per host on multi-host)
+         <dir>/step_<N>.COMMIT   written LAST -> restart-safe atomicity
+
+Restores re-shard onto whatever mesh the new run uses (shardings are applied
+by the caller via device_put, so pod counts can change between runs — elastic
+scaling). An async mode hands the host-transfer + write to a daemon thread so
+the train loop never blocks on I/O.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+from repro.models.module import tree_paths
+
+# numpy can't natively (de)serialize bf16/fp8 — store raw uint16/uint8 views
+# and record the logical dtype in the manifest
+_RAW_VIEW = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+             "float8_e5m2": np.uint8}
+_ML_DTYPES = {"bfloat16": ml_dtypes.bfloat16,
+              "float8_e4m3fn": ml_dtypes.float8_e4m3fn,
+              "float8_e5m2": ml_dtypes.float8_e5m2}
+
+
+def _leaf_file(path) -> str:
+    return "__".join(str(p) for p in path) + ".npy"
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any, *,
+                    metadata: Optional[Dict] = None) -> str:
+    """Atomic synchronous save. Returns the commit marker path."""
+    step_dir = os.path.join(ckpt_dir, f"step_{step}")
+    tmp_dir = step_dir + ".tmp"
+    if os.path.exists(tmp_dir):
+        shutil.rmtree(tmp_dir)
+    os.makedirs(tmp_dir, exist_ok=True)
+    manifest = {"step": step, "leaves": [], "metadata": metadata or {}}
+    for path, leaf in tree_paths(tree):
+        arr = np.asarray(jax.device_get(leaf))
+        logical_dtype = str(arr.dtype)
+        if logical_dtype in _RAW_VIEW:
+            arr = arr.view(_RAW_VIEW[logical_dtype])
+        fname = _leaf_file(path)
+        np.save(os.path.join(tmp_dir, fname), arr)
+        manifest["leaves"].append({"path": list(path), "file": fname,
+                                   "shape": list(arr.shape),
+                                   "dtype": logical_dtype})
+    with open(os.path.join(tmp_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(step_dir):
+        shutil.rmtree(step_dir)
+    os.rename(tmp_dir, step_dir)
+    commit = step_dir + ".COMMIT"
+    with open(commit, "w") as f:
+        f.write("ok")
+    return commit
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.endswith(".COMMIT"):
+            try:
+                steps.append(int(name[len("step_"):-len(".COMMIT")]))
+            except ValueError:
+                continue
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: Optional[int] = None, *,
+                       shardings: Any = None) -> Dict:
+    """Returns {"tree": nested dict, "step": int, "metadata": dict}.
+
+    If ``shardings`` (a pytree of jax.sharding.Sharding matching the saved
+    tree) is given, leaves are device_put onto it — this is the elastic
+    re-shard path: the target mesh may differ from the saving run's mesh.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
+    step_dir = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(step_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    tree: Dict = {}
+    shard_list = None
+    if shardings is not None:
+        shard_list = {tuple(p): s for p, s in
+                      ((path, leaf) for path, leaf in tree_paths(shardings))}
+    for entry in manifest["leaves"]:
+        arr = np.load(os.path.join(step_dir, entry["file"]))
+        if entry["dtype"] in _ML_DTYPES:
+            arr = arr.view(_ML_DTYPES[entry["dtype"]])
+        path = tuple(entry["path"])
+        if shard_list is not None and path in shard_list:
+            arr = jax.device_put(arr, shard_list[path])
+        node = tree
+        for k in path[:-1]:
+            node = node.setdefault(k, {})
+        node[path[-1]] = arr
+    return {"tree": tree, "step": step, "metadata": manifest["metadata"]}
+
+
+class CheckpointManager:
+    """Retention + async saves + resume."""
+
+    def __init__(self, ckpt_dir: str, *, keep: int = 3, async_save: bool = True):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(ckpt_dir, exist_ok=True)
+
+    def save(self, step: int, tree: Any, metadata: Optional[Dict] = None):
+        # snapshot to host BEFORE handing to the thread (values keep training)
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            save_checkpoint(self.ckpt_dir, step, host_tree, metadata=metadata)
+            self._gc()
+
+        if self.async_save:
+            self.wait()
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore(self, step: Optional[int] = None, shardings=None) -> Dict:
+        self.wait()
+        return restore_checkpoint(self.ckpt_dir, step, shardings=shardings)
+
+    def _gc(self):
+        steps = sorted(s for s in self._committed())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s}"),
+                          ignore_errors=True)
+            try:
+                os.remove(os.path.join(self.ckpt_dir, f"step_{s}.COMMIT"))
+            except FileNotFoundError:
+                pass
+
+    def _committed(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.ckpt_dir):
+            if name.endswith(".COMMIT"):
+                try:
+                    out.append(int(name[len("step_"):-len(".COMMIT")]))
+                except ValueError:
+                    pass
+        return out

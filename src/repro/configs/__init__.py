@@ -1,0 +1,3 @@
+from repro.configs.base import (ArchConfig, ShapeConfig, SHAPES, TRAIN_4K,
+                                PREFILL_32K, DECODE_32K, LONG_500K, get, names,
+                                register, shapes_for, skip_reason)

@@ -1,0 +1,12 @@
+"""Grok-1 314B [hf:xai-org/grok-1]: 64L d=6144 48H GQA kv=8, MoE 8e top-2,
+d_ff=32768. Expert tensor-parallel sharding (32768/16=2048 per shard)."""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="grok-1-314b", family="moe",
+    num_layers=64, d_model=6144, num_heads=48, num_kv_heads=8,
+    d_ff=32768, vocab_size=131072, head_dim=128,
+    num_experts=8, num_shared_experts=0, experts_per_token=2,
+    moe_d_ff=32768, moe_sharding="tp",
+    mlp_activation="gelu", num_freeze_blocks=8,
+))

@@ -1,0 +1,12 @@
+"""HuBERT-XLarge [arXiv:2106.07447]: encoder-only (bidirectional), conv
+feature extractor STUB (input_specs provides 512-dim frame features),
+masked-cluster prediction head over 504 units. No decode shapes."""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="hubert-xlarge", family="audio",
+    num_layers=48, d_model=1280, num_heads=16, num_kv_heads=16,
+    d_ff=5120, vocab_size=504, head_dim=80,
+    is_encoder_only=True, modality="audio_stub", frontend_dim=512,
+    norm="layernorm", mlp_activation="gelu", num_freeze_blocks=4,
+))

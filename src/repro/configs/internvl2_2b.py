@@ -1,0 +1,12 @@
+"""InternVL2-2B [arXiv:2404.16821; hf]: InternViT frontend (STUB — input_specs
+provides precomputed patch embeddings, vit_dim=1024, 256 tokens/image) +
+InternLM2-1.8B backbone (GQA kv=8)."""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="internvl2-2b", family="vlm",
+    num_layers=24, d_model=2048, num_heads=16, num_kv_heads=8,
+    d_ff=8192, vocab_size=92553, head_dim=128,
+    modality="vision_stub", frontend_dim=1024, num_image_tokens=256,
+    num_freeze_blocks=4,
+))

@@ -1,0 +1,13 @@
+"""MiniCPM3-4B [hf:openbmb/MiniCPM3-4B]: dense MLA. 40 heads do not divide the
+16-way model axis -> reduction-dim TP fallback (DESIGN.md §4); vocab 73448 is
+odd too, so the embedding shards on d_model."""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="minicpm3-4b", family="dense",
+    num_layers=62, d_model=2560, num_heads=40, num_kv_heads=40,
+    d_ff=6400, vocab_size=73448, head_dim=64,
+    attention="mla", q_lora_rank=768, kv_lora_rank=256,
+    qk_nope_dim=64, qk_rope_dim=32, v_head_dim=64,
+    num_freeze_blocks=6,
+))

@@ -1,0 +1,2 @@
+"""Paper-repro CNNs (ResNet10/18 on CIFAR) — see models/cnn.py."""
+from repro.models.cnn import RESNET10, RESNET18  # noqa: F401

@@ -1,0 +1,2 @@
+"""Paper-repro CNNs (VGG11_bn/VGG16_bn on CIFAR) — see models/cnn.py."""
+from repro.models.cnn import VGG11, VGG16  # noqa: F401

@@ -1,0 +1,14 @@
+"""xLSTM-350M [arXiv:2405.04517]: sLSTM + mLSTM blocks, 24L d=1024 4H.
+
+Assumption (noted in DESIGN.md): xLSTM[7:1] ratio -> every 8th layer sLSTM,
+rest mLSTM (the paper's 350M variant interleaves both block types).
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="xlstm-350m", family="ssm",
+    num_layers=24, d_model=1024, num_heads=4, num_kv_heads=4,
+    d_ff=0, vocab_size=50304,
+    ssm_state=64, ssm_expand=2, slstm_every=8,
+    subquadratic=True, num_freeze_blocks=4,
+))

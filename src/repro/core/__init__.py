@@ -1,0 +1,6 @@
+from repro.core.freezing import (StagePlan, make_stage_plan, split_stage_params,
+                                 merge_stage_params, stage_forward, stage_loss_fn,
+                                 init_stage_active, make_train_step,
+                                 make_fed_round_step, TrainState)
+from repro.core.pace import PaceController
+from repro.core.selector import ParticipantSelector, ClientInfo, rlcd_communities

@@ -1,0 +1,119 @@
+"""Progressive stage training for the CNN repro models (paper testbed).
+
+Faithful to §IV-A: the stage-t submodel is [stem?, stages 0..t, output
+module]; suffix stages DO NOT EXIST yet (model growth). Frozen prefix runs in
+eval mode (BN running stats) under stop_gradient; only stage t (+stem at t=0)
+and the output module are differentiated/optimized.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import output_module as op_mod
+from repro.models.cnn import CNN
+from repro.models.module import PFac, Params
+from repro.optim import Optimizer, apply_updates, clip_by_global_norm
+
+
+def split_cnn_params(model: CNN, params: Params, stage: int
+                     ) -> Tuple[Params, Params]:
+    n_stages = len(model.cfg.stage_sizes)
+    frozen: Params = {"stages": {}}
+    active: Params = {"stages": {}}
+    if model.cfg.kind == "resnet":
+        (active if stage == 0 else frozen)["stem"] = params["stem"]
+    for i in range(stage):
+        frozen["stages"][f"stage{i}"] = params["stages"][f"stage{i}"]
+    active["stages"][f"stage{stage}"] = params["stages"][f"stage{stage}"]
+    if stage == n_stages - 1:
+        active["fc"] = params["fc"]
+    return frozen, active
+
+
+def merge_cnn_params(model: CNN, params: Params, stage: int, active: Params) -> Params:
+    new = {k: v for k, v in params.items()}
+    new["stages"] = dict(params["stages"])
+    if "stem" in active:
+        new["stem"] = active["stem"]
+    new["stages"][f"stage{stage}"] = active["stages"][f"stage{stage}"]
+    if "fc" in active:
+        new["fc"] = active["fc"]
+    return new
+
+
+def init_cnn_stage_active(model: CNN, params: Params, stage: int, rng, *,
+                          op_kind: str = "conv") -> Tuple[Params, Params]:
+    """op_kind: conv (paper) | fc_only (ablation) | none (final stage)."""
+    frozen, active = split_cnn_params(model, params, stage)
+    n_stages = len(model.cfg.stage_sizes)
+    if stage < n_stages - 1:
+        fac = PFac(rng, dtype=jnp.float32)
+        if op_kind == "conv":
+            active["op"] = op_mod.cnn_op_init(fac.sub("op"), model.cfg, stage)
+        elif op_kind == "fc_only":
+            active["op"] = op_mod.cnn_fc_only_init(fac.sub("op"), model.cfg, stage)
+    return frozen, active
+
+
+def cnn_stage_forward(model: CNN, frozen: Params, active: Params,
+                      bn_state: Params, x: jnp.ndarray, stage: int, *,
+                      op_kind: str = "conv", train: bool = True):
+    cfg = model.cfg
+    n_stages = len(cfg.stage_sizes)
+    merged: Params = {}
+    if "stem" in active:
+        merged["stem"] = active["stem"]
+    elif "stem" in frozen:
+        merged["stem"] = frozen["stem"]
+    merged["stages"] = {**frozen["stages"], **active["stages"]}
+    if "fc" in active:
+        merged["fc"] = active["fc"]
+    # stem
+    if cfg.kind == "resnet":
+        h, bn_state = model.stem(merged, bn_state, x, train=train and stage == 0)
+    else:
+        h = x
+    # frozen prefix: eval mode, stop_gradient boundary
+    if stage > 0:
+        h, _ = model.run_stages(merged, bn_state, h, 0, stage, train=False)
+        h = jax.lax.stop_gradient(h)
+    # active stage
+    h, bn_state = model.run_stages(merged, bn_state, h, stage, stage + 1,
+                                   train=train)
+    if stage == n_stages - 1:
+        logits = model.head(merged, h)
+    elif op_kind == "fc_only":
+        logits = op_mod.cnn_fc_only_apply(active["op"], h)
+    else:
+        logits = op_mod.cnn_op_apply(active["op"], h, cfg, stage)
+    return logits, bn_state
+
+
+def cnn_stage_loss_fn(model: CNN, stage: int, *, op_kind: str = "conv"):
+    def loss_fn(active, frozen, bn_state, batch):
+        logits, new_state = cnn_stage_forward(model, frozen, active, bn_state,
+                                              batch["x"], stage, op_kind=op_kind)
+        lf = logits.astype(jnp.float32)
+        logz = jax.scipy.special.logsumexp(lf, axis=-1)
+        gold = jnp.take_along_axis(lf, batch["y"][:, None], axis=-1)[:, 0]
+        return jnp.mean(logz - gold), new_state
+
+    return loss_fn
+
+
+def make_cnn_stage_step(model: CNN, stage: int, optimizer: Optimizer, *,
+                        op_kind: str = "conv", clip_norm: float = 10.0):
+    loss_fn = cnn_stage_loss_fn(model, stage, op_kind=op_kind)
+
+    def step(active, frozen, bn_state, opt_state, batch):
+        (loss, new_bn), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            active, frozen, bn_state, batch)
+        grads, _ = clip_by_global_norm(grads, clip_norm)
+        ups, opt_state = optimizer.update(grads, opt_state, active)
+        active = apply_updates(active, ups)
+        return active, new_bn, opt_state, loss
+
+    return jax.jit(step)

@@ -1,0 +1,140 @@
+"""Pace controller (paper §IV-B): data-free convergence detection per block.
+
+Block perturbation over an update window Q (Eq. 2):
+
+    P_t^{r,Q} = || sum_{q<Q} W_t^{r-q} || / sum_{q<Q} || W_t^{r-q} ||
+
+The numerator telescopes: sum of the last Q updates == theta^r - theta^{r-Q},
+so the exact sliding window needs only a FIFO of Q parameter snapshots of the
+*active block* (1/T of the model, sharded like the params); the denominator is
+a FIFO of scalar norms. A smoothing window H (Eq. 3) and a least-squares slope
+test (|slope| < Lambda for mu consecutive rounds) gate the freeze.
+
+The controller is control-plane: it consumes per-round scalar norms computed
+on-mesh (kernels/block_perturb for the fused norm) and decides on host.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_sub(a, b):
+    return jax.tree.map(lambda x, y: x.astype(jnp.float32) - y.astype(jnp.float32), a, b)
+
+
+def tree_norm(t) -> float:
+    from repro.optim import global_norm
+
+    return float(global_norm(t))
+
+
+@dataclass
+class PaceController:
+    """One controller instance per SmartFreeze block (the active one)."""
+
+    window_q: int = 5        # Eq. 2 update window
+    smooth_h: int = 5        # Eq. 3 smoothing window
+    slope_lambda: float = 2e-3   # freeze threshold on |slope|
+    mu: int = 3              # consecutive rounds below threshold
+    fit_window: int = 8      # points used for the least-squares fit
+    min_rounds: int = 10     # never freeze before this many rounds
+
+    _snapshots: Deque = field(default_factory=deque)  # theta^{r-q} FIFO
+    _update_norms: Deque = field(default_factory=deque)
+    _perturbations: List[float] = field(default_factory=list)
+    _smoothed: List[float] = field(default_factory=list)
+    _below: int = 0
+    _rounds: int = 0
+
+    # ----- per-round observation -----
+
+    def observe(self, block_params) -> Optional[float]:
+        """Call once per round with the aggregated active-block params.
+
+        Returns the smoothed block perturbation (None until >= 2 rounds).
+        """
+        params = jax.tree.map(lambda x: np.asarray(x, np.float32), block_params)
+        if self._snapshots:
+            latest = self._snapshots[-1]
+            upd_norm = _np_norm(_np_sub(params, latest))
+            self._update_norms.append(upd_norm)
+            if len(self._update_norms) > self.window_q:
+                self._update_norms.popleft()
+        self._snapshots.append(params)
+        if len(self._snapshots) > self.window_q + 1:
+            self._snapshots.popleft()
+        self._rounds += 1
+        if len(self._snapshots) < 2:
+            return None
+        # numerator: telescoped sum of the last <=Q updates
+        num = _np_norm(_np_sub(self._snapshots[-1], self._snapshots[0]))
+        den = sum(self._update_norms) + 1e-12
+        p = num / den
+        self._perturbations.append(p)
+        h = min(self.smooth_h, len(self._perturbations))
+        sm = float(np.mean(self._perturbations[-h:]))
+        self._smoothed.append(sm)
+        return sm
+
+    # ----- freeze decision -----
+
+    def slope(self) -> Optional[float]:
+        n = min(self.fit_window, len(self._smoothed))
+        if n < 3:
+            return None
+        y = np.asarray(self._smoothed[-n:], np.float64)
+        x = np.arange(n, dtype=np.float64)
+        return float(np.polyfit(x, y, 1)[0])
+
+    def should_freeze(self) -> bool:
+        if self._rounds < self.min_rounds:
+            return False
+        s = self.slope()
+        if s is None:
+            return False
+        if abs(s) < self.slope_lambda:
+            self._below += 1
+        else:
+            self._below = 0
+        return self._below >= self.mu
+
+    @property
+    def history(self):
+        return {"perturbation": list(self._perturbations),
+                "smoothed": list(self._smoothed), "rounds": self._rounds}
+
+
+def _np_sub(a, b):
+    return jax.tree.map(lambda x, y: x - y, a, b)
+
+
+def _np_norm(t) -> float:
+    total = 0.0
+    for leaf in jax.tree.leaves(t):
+        total += float(np.sum(np.square(leaf, dtype=np.float64)))
+    return float(np.sqrt(total))
+
+
+# ---------------------------------------------------------------------------
+# Ablation schedules (paper Table II comparisons)
+# ---------------------------------------------------------------------------
+
+
+def naive_equal_schedule(total_rounds: int, num_blocks: int) -> List[int]:
+    """(c) rounds allocated proportional to block index (param-count proxy)."""
+    base = total_rounds // num_blocks
+    return [base] * num_blocks
+
+
+def front_loaded_schedule(total_rounds: int, num_blocks: int) -> List[int]:
+    """(b) freeze early blocks prematurely; spend rounds on the last block."""
+    early = max(total_rounds // (4 * num_blocks), 1)
+    sched = [early] * (num_blocks - 1)
+    sched.append(total_rounds - sum(sched))
+    return sched

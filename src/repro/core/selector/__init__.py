@@ -1,0 +1,5 @@
+from repro.core.selector.similarity import output_layer_gradient, similarity_matrix
+from repro.core.selector.louvain import louvain
+from repro.core.selector.rlcd import rlcd_communities
+from repro.core.selector.bandit import UtilBandit
+from repro.core.selector.selection import ParticipantSelector, ClientInfo

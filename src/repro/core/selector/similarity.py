@@ -1,0 +1,30 @@
+"""Client similarity from output-layer gradients (paper Eq. 8).
+
+Each client trains ONLY the global model's output layer for a few steps on
+local data and reports that gradient vector once (memory-cheap: no backprop
+through the body). Cosine similarity between these vectors tracks label
+distribution similarity — the basis for RL-CD community detection.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def output_layer_gradient(loss_head_fn: Callable, head_params, data) -> np.ndarray:
+    """Gradient of the loss wrt output-layer params only, flattened."""
+    g = jax.grad(loss_head_fn)(head_params, data)
+    return np.concatenate([np.asarray(x, np.float32).ravel()
+                           for x in jax.tree.leaves(g)])
+
+
+def similarity_matrix(grads: Dict[int, np.ndarray]) -> np.ndarray:
+    """Omega[i, j] = cosine similarity of client gradient vectors (Eq. 8)."""
+    ids = sorted(grads)
+    G = np.stack([grads[i] for i in ids]).astype(np.float64)
+    norms = np.linalg.norm(G, axis=1, keepdims=True)
+    G = G / np.maximum(norms, 1e-12)
+    return G @ G.T

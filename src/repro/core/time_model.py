@@ -1,0 +1,38 @@
+"""Stage-based system time model — Eqs. (5)-(7).
+
+t_t^i = rho * FLOPs_t * |D_i| / c_i          (Eq. 6)
+T_r(S, t) = max_{i in S} t_t^i              (Eq. 7, synchronous round)
+
+``c_i`` is the device's runtime training capability (FLOP/s it actually
+sustains, reported by the local monitor); ``rho`` a calibration coefficient
+determined offline (paper §IV-C2). The same model drives straggler-aware
+selection and the deadline used for partial aggregation.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Sequence
+
+from repro.core.memory_model import stage_flops, full_model_flops
+
+
+def client_stage_time(cfg, stage: int, num_samples: int, capability_flops: float,
+                      *, batch: int = 1, seq: int = 1, rho: float = 1.0) -> float:
+    """Eq. (6): seconds for client i to finish stage-t local training."""
+    per_sample = stage_flops(cfg, stage, batch, seq)["total"] / max(batch, 1)
+    return rho * per_sample * num_samples / capability_flops
+
+
+def round_time(cfg, stage: int, clients: Sequence[Dict], *,
+               batch: int = 1, seq: int = 1, rho: float = 1.0) -> float:
+    """Eq. (7): synchronous round time = slowest selected client."""
+    return max(client_stage_time(cfg, stage, c["num_samples"], c["capability"],
+                                 batch=batch, seq=seq, rho=rho)
+               for c in clients)
+
+
+def stage_speedup(cfg, stage: int, *, batch: int = 1, seq: int = 128) -> float:
+    """FLOPs speedup of stage-t training vs full-model training (paper: up to
+    2.02x across the whole schedule)."""
+    full = full_model_flops(cfg, batch, seq)
+    st = stage_flops(cfg, stage, batch, seq)["total"]
+    return full / st

@@ -1,0 +1,4 @@
+from repro.data.synthetic import (SyntheticVision, SyntheticLM, make_lm_batch,
+                                  input_specs)
+from repro.data.partition import dirichlet_partition, iid_partition
+from repro.data.pipeline import ShardedLoader

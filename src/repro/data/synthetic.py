@@ -1,0 +1,122 @@
+"""Synthetic data: learnable vision classification (per-class Gaussian
+prototypes over structured images) and LM token streams, plus the
+ShapeDtypeStruct ``input_specs`` the dry-run lowers against.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+
+# ---------------------------------------------------------------------------
+# Vision (CIFAR-like) — learnable, so FL accuracy trends are real
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class SyntheticVision:
+    num_classes: int = 10
+    image_size: int = 32
+    noise: float = 0.35
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.RandomState(self.seed)
+        # class prototypes: low-frequency random patterns (conv-learnable)
+        base = rng.randn(self.num_classes, 8, 8, 3).astype(np.float32)
+        self.protos = np.stack([
+            np.kron(base[c], np.ones((4, 4, 1), np.float32))[:self.image_size, :self.image_size]
+            for c in range(self.num_classes)])
+
+    def sample(self, n: int, labels: Optional[np.ndarray] = None,
+               seed: int = 0) -> Dict[str, np.ndarray]:
+        rng = np.random.RandomState(seed)
+        y = labels if labels is not None else rng.randint(0, self.num_classes, n)
+        x = self.protos[y] + self.noise * rng.randn(n, self.image_size,
+                                                    self.image_size, 3).astype(np.float32)
+        return {"x": x.astype(np.float32), "y": y.astype(np.int32)}
+
+
+# ---------------------------------------------------------------------------
+# LM token streams
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class SyntheticLM:
+    vocab_size: int
+    seed: int = 0
+
+    def sample(self, batch: int, seq: int, seed: int = 0) -> Dict[str, np.ndarray]:
+        """Zipf-distributed tokens with a learnable bigram structure."""
+        rng = np.random.RandomState(seed)
+        v = self.vocab_size
+        ranks = np.arange(1, v + 1, dtype=np.float64)
+        probs = 1.0 / ranks
+        probs /= probs.sum()
+        toks = rng.choice(v, size=(batch, seq + 1), p=probs).astype(np.int32)
+        # inject determinism: every even position repeats (t-1 + 1) mod v
+        toks[:, 2::2] = (toks[:, 1:-1:2] + 1) % v
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:].astype(np.int32)}
+
+
+def make_lm_batch(cfg: ArchConfig, batch: int, seq: int, seed: int = 0) -> Dict:
+    """Concrete (numpy) batch for smoke tests, modality-aware."""
+    rng = np.random.RandomState(seed)
+    if cfg.modality == "audio_stub":
+        return {"frames": rng.randn(batch, seq, cfg.frontend_dim).astype(np.float32),
+                "labels": rng.randint(0, cfg.vocab_size, (batch, seq)).astype(np.int32)}
+    if cfg.modality == "vision_stub":
+        nt = cfg.num_image_tokens
+        st = seq - nt
+        return {"tokens": rng.randint(0, cfg.vocab_size, (batch, st)).astype(np.int32),
+                "patches": rng.randn(batch, nt, cfg.frontend_dim).astype(np.float32),
+                "labels": rng.randint(0, cfg.vocab_size, (batch, st)).astype(np.int32)}
+    d = SyntheticLM(cfg.vocab_size).sample(batch, seq, seed)
+    return d
+
+
+# ---------------------------------------------------------------------------
+# Dry-run input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, *,
+                num_pods: int = 1, local_steps: int = 1) -> Dict:
+    """Abstract inputs for one step at the given assigned shape.
+
+    train: federated-round layout [num_pods, local_steps, per_pod_batch, ...]
+    prefill: [batch, seq] tokens; decode: [batch, 1] token + pos scalar
+    (the KV cache is built separately — it is state, not input).
+    """
+    f32 = jnp.float32
+    i32 = jnp.int32
+    B, S = shape.global_batch, shape.seq_len
+
+    def tok_specs(b, lead=()):
+        if cfg.modality == "audio_stub":
+            return {"frames": jax.ShapeDtypeStruct(lead + (b, S, cfg.frontend_dim), f32),
+                    "labels": jax.ShapeDtypeStruct(lead + (b, S), i32)}
+        if cfg.modality == "vision_stub":
+            nt = cfg.num_image_tokens
+            return {"tokens": jax.ShapeDtypeStruct(lead + (b, S - nt), i32),
+                    "patches": jax.ShapeDtypeStruct(lead + (b, nt, cfg.frontend_dim), f32),
+                    "labels": jax.ShapeDtypeStruct(lead + (b, S - nt), i32)}
+        return {"tokens": jax.ShapeDtypeStruct(lead + (b, S), i32),
+                "labels": jax.ShapeDtypeStruct(lead + (b, S), i32)}
+
+    if shape.kind == "train":
+        per_pod = B // num_pods
+        return tok_specs(per_pod, lead=(num_pods, local_steps))
+    if shape.kind == "prefill":
+        return tok_specs(B)
+    # decode: one new token against a seq_len cache
+    if cfg.modality == "audio_stub":
+        raise ValueError("encoder-only arch has no decode step")
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}

@@ -1,0 +1,3 @@
+from repro.fl.client import SimClient, make_client_fleet
+from repro.fl.server import SmartFreezeServer, FedAvgServer, RoundResult
+from repro.fl.compression import topk_compress, topk_decompress, ErrorFeedback

@@ -1,0 +1,397 @@
+"""The paper's six baselines (§V-A), implemented for the CNN testbed.
+
+AllSmall     — width-scale the whole model to the minimum client memory.
+ExclusiveFL  — vanilla FedAvg, only clients that fit the FULL model.
+DepthFL      — depth-scaled submodels + auxiliary classifiers, per-stage agg.
+HeteroFL     — per-client width scaling, overlapping-slice aggregation.
+TiFL         — tier clients by round time, sample within a tier.
+Oort         — utility-based selection (stat util x time penalty).
+
+Each returns the same history format as the servers in fl/server.py so the
+benchmark harness plots them together (paper Figs. 7-8 / Table I).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import freezing_cnn as fz
+from repro.core.output_module import cnn_fc_only_apply, cnn_fc_only_init
+from repro.fl.client import SimClient
+from repro.fl.server import FedAvgServer, RoundResult, _weighted_avg, cnn_stage_memory_bytes
+from repro.models.cnn import CNN, CNNConfig
+from repro.models.module import PFac
+from repro.optim import apply_updates, clip_by_global_norm, sgd
+
+
+def full_model_memory(model: CNN, batch_size: int) -> float:
+    n = len(model.cfg.stage_sizes)
+    return sum(cnn_stage_memory_bytes(model, s, batch_size) for s in range(n))
+
+
+def scaled_config(cfg: CNNConfig, scale: float) -> CNNConfig:
+    chans = tuple(max(int(c * scale), 4) for c in cfg.stage_channels)
+    return dataclasses.replace(cfg, stage_channels=chans,
+                               name=f"{cfg.name}_x{scale:g}")
+
+
+# ---------------------------------------------------------------------------
+# AllSmall
+# ---------------------------------------------------------------------------
+
+
+def run_allsmall(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
+                 batch_size: int = 32, eval_fn=None, seed: int = 0, **kw) -> Dict:
+    """Scale channels until the model fits the SMALLEST client memory."""
+    min_mem = min(c.memory_bytes for c in clients)
+    scale = 1.0
+    while scale > 0.05:
+        model = CNN(scaled_config(cfg, scale))
+        if full_model_memory(model, batch_size) <= min_mem:
+            break
+        scale *= 0.5
+    model = CNN(scaled_config(cfg, scale))
+    params, state = model.init(jax.random.PRNGKey(seed))
+    srv = FedAvgServer(model, clients, batch_size=batch_size, seed=seed, **kw)
+    out = srv.run(params, state, rounds=rounds,
+                  eval_fn=(lambda p, s, st: eval_fn(model, p, s)) if eval_fn else None)
+    out["scale"] = scale
+    out["model"] = model
+    return out
+
+
+# ---------------------------------------------------------------------------
+# ExclusiveFL
+# ---------------------------------------------------------------------------
+
+
+def run_exclusivefl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
+                    batch_size: int = 32, eval_fn=None, seed: int = 0, **kw) -> Dict:
+    model = CNN(cfg)
+    req = full_model_memory(model, batch_size)
+    eligible = [c for c in clients if c.memory_bytes >= req]
+    out: Dict = {"participation": len(eligible) / len(clients), "history": []}
+    if not eligible:
+        out["inoperative"] = True  # paper: ResNet18/VGG16 scenarios
+        return out
+    params, state = model.init(jax.random.PRNGKey(seed))
+    srv = FedAvgServer(model, clients, batch_size=batch_size,
+                       mem_required=req, seed=seed, **kw)
+    res = srv.run(params, state, rounds=rounds,
+                  eval_fn=(lambda p, s, st: eval_fn(model, p, s)) if eval_fn else None)
+    res["participation"] = out["participation"]
+    res["model"] = model
+    return res
+
+
+# ---------------------------------------------------------------------------
+# DepthFL
+# ---------------------------------------------------------------------------
+
+
+def run_depthfl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
+                batch_size: int = 32, clients_per_round: int = 10,
+                eval_fn=None, seed: int = 0, local_epochs: int = 1) -> Dict:
+    """Depth-scaled submodels: client c trains stages [0..d_c) + aux head."""
+    model = CNN(cfg)
+    n_stages = len(cfg.stage_sizes)
+    params, state = model.init(jax.random.PRNGKey(seed))
+    # aux classifier per non-final depth
+    fac = PFac(jax.random.PRNGKey(seed + 1), dtype=jnp.float32)
+    aux = {d: cnn_fc_only_init(fac.sub(f"aux{d}"), cfg, d) for d in range(n_stages - 1)}
+
+    # assign depth by memory
+    depths = {}
+    for c in clients:
+        d = 0
+        for s in range(n_stages):
+            need = sum(cnn_stage_memory_bytes(model, t, batch_size) for t in range(s + 1))
+            if c.memory_bytes >= need:
+                d = s
+        depths[c.client_id] = d
+    participation = np.mean([depths[c.client_id] == n_stages - 1 for c in clients])
+
+    def make_step(depth: int):
+        def loss_fn(p, st, batch):
+            h = batch["x"]
+            if cfg.kind == "resnet":
+                h, st = model.stem(p, st, h, train=True)
+            h, st = model.run_stages(p, st, h, 0, depth + 1, train=True)
+            logits = model.head(p, h) if depth == n_stages - 1 \
+                else cnn_fc_only_apply(p["aux"], h)
+            lf = logits.astype(jnp.float32)
+            logz = jax.scipy.special.logsumexp(lf, axis=-1)
+            gold = jnp.take_along_axis(lf, batch["y"][:, None], axis=-1)[:, 0]
+            return jnp.mean(logz - gold), st
+
+        opt = sgd(0.05)
+
+        @jax.jit
+        def step(p, frozen_unused, st, opt_state, batch):
+            (loss, new_st), grads = jax.value_and_grad(loss_fn, has_aux=True)(p, st, batch)
+            grads, _ = clip_by_global_norm(grads, 10.0)
+            ups, opt_state = opt.update(grads, opt_state, p)
+            return apply_updates(p, ups), new_st, opt_state, loss
+
+        return step, opt
+
+    steps = {d: make_step(d) for d in range(n_stages)}
+    rng = np.random.RandomState(seed)
+    history = []
+    for r in range(rounds):
+        sel = list(rng.choice([c.client_id for c in clients],
+                              size=min(clients_per_round, len(clients)), replace=False))
+        updates, weights, losses = [], [], []
+        for cid in sel:
+            c = next(cl for cl in clients if cl.client_id == cid)
+            d = depths[cid]
+            sub = {k: params[k] for k in params if k != "fc"}
+            if d == n_stages - 1:
+                sub["fc"] = params["fc"]
+            else:
+                sub = dict(sub)
+                sub["aux"] = aux[d]
+            step, opt = steps[d]
+            p_i, s_i, loss_i, _ = c.local_train(step, sub, None, state,
+                                                opt.init(sub),
+                                                batch_size=batch_size,
+                                                epochs=local_epochs, round_idx=r)
+            updates.append((cid, d, p_i, s_i))
+            weights.append(c.num_samples)
+            losses.append(loss_i)
+        # per-stage aggregation over clients that trained the stage
+        w = np.asarray(weights, np.float64)
+        new_params = dict(params)
+        for s in range(n_stages):
+            having = [(i, u) for i, u in enumerate(updates) if u[1] >= s]
+            if not having:
+                continue
+            ws = np.asarray([w[i] for i, _ in having])
+            ws /= ws.sum()
+            new_params["stages"] = dict(new_params["stages"])
+            new_params["stages"][f"stage{s}"] = _weighted_avg(
+                [u[2]["stages"][f"stage{s}"] for _, u in having], ws)
+        if cfg.kind == "resnet":
+            ws = w / w.sum()
+            new_params["stem"] = _weighted_avg([u[2]["stem"] for u in updates], ws)
+        fc_have = [(i, u) for i, u in enumerate(updates) if u[1] == n_stages - 1]
+        if fc_have:
+            ws = np.asarray([w[i] for i, _ in fc_have])
+            ws /= ws.sum()
+            new_params["fc"] = _weighted_avg([u[2]["fc"] for _, u in fc_have], ws)
+        for d in range(n_stages - 1):
+            have = [(i, u) for i, u in enumerate(updates) if u[1] == d]
+            if have:
+                ws = np.asarray([w[i] for i, _ in have])
+                ws /= ws.sum()
+                aux[d] = _weighted_avg([u[2]["aux"] for _, u in have], ws)
+        params = new_params
+        state = _weighted_avg([u[3] for u in updates], w / w.sum())
+        rr = RoundResult(r, n_stages - 1, float(np.mean(losses)), selected=sel)
+        if eval_fn is not None and r % 10 == 0:
+            rr.test_acc = eval_fn(model, params, state)
+        history.append(rr)
+    return {"params": params, "state": state, "history": history,
+            "participation": float(participation), "model": model}
+
+
+# ---------------------------------------------------------------------------
+# HeteroFL
+# ---------------------------------------------------------------------------
+
+
+_HFL_SCALES = (1.0, 0.5, 0.25, 0.125)
+
+
+def _slice_like(full, small):
+    """Upper-left slice of `full` with `small`'s shape."""
+    slices = tuple(slice(0, s) for s in small.shape)
+    return full[slices]
+
+
+def run_heterofl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
+                 batch_size: int = 32, clients_per_round: int = 10,
+                 eval_fn=None, seed: int = 0, local_epochs: int = 1) -> Dict:
+    model_full = CNN(cfg)
+    params_full, state_full = model_full.init(jax.random.PRNGKey(seed))
+    # assign the largest scale whose model fits each client
+    scale_of = {}
+    models = {s: CNN(scaled_config(cfg, s)) for s in _HFL_SCALES}
+    for c in clients:
+        sc = _HFL_SCALES[-1]
+        for s in _HFL_SCALES:
+            if full_model_memory(models[s], batch_size) <= c.memory_bytes:
+                sc = s
+                break
+        scale_of[c.client_id] = sc
+
+    def make_step(scale):
+        model_s = models[scale]
+        opt = sgd(0.05)
+
+        @jax.jit
+        def step(p, frozen_unused, st, opt_state, batch):
+            def loss_fn(p_, st_):
+                return model_s.loss(p_, st_, batch, train=True)
+
+            (loss, new_st), grads = jax.value_and_grad(
+                lambda p_: loss_fn(p_, st), has_aux=True)(p)
+            grads, _ = clip_by_global_norm(grads, 10.0)
+            ups, opt_state2 = opt.update(grads, opt_state, p)
+            return apply_updates(p, ups), new_st, opt_state2, loss
+
+        return step, opt
+
+    steps = {s: make_step(s) for s in _HFL_SCALES}
+    rng = np.random.RandomState(seed)
+    history = []
+    n_stages = len(cfg.stage_sizes)
+    for r in range(rounds):
+        sel = list(rng.choice([c.client_id for c in clients],
+                              size=min(clients_per_round, len(clients)), replace=False))
+        # slice out submodels
+        updates, weights = [], []
+        losses = []
+        for cid in sel:
+            c = next(cl for cl in clients if cl.client_id == cid)
+            sc = scale_of[cid]
+            sub_shape, sub_state_shape = jax.eval_shape(
+                lambda: models[sc].init(jax.random.PRNGKey(0)))
+            sub = jax.tree.map(_slice_like, params_full, sub_shape)
+            sub_st = jax.tree.map(_slice_like, state_full, sub_state_shape)
+            step, opt = steps[sc]
+            p_i, s_i, loss_i, _ = c.local_train(step, sub, None, sub_st,
+                                                opt.init(sub),
+                                                batch_size=batch_size,
+                                                epochs=local_epochs, round_idx=r)
+            updates.append((p_i, s_i))
+            weights.append(c.num_samples)
+            losses.append(loss_i)
+        # overlapping-slice aggregation into the full model
+        acc = jax.tree.map(lambda x: np.zeros(x.shape, np.float64), params_full)
+        cnt = jax.tree.map(lambda x: np.zeros(x.shape, np.float64), params_full)
+        acc_s = jax.tree.map(lambda x: np.zeros(x.shape, np.float64), state_full)
+        cnt_s = jax.tree.map(lambda x: np.zeros(x.shape, np.float64), state_full)
+        for (p_i, s_i), wi in zip(updates, weights):
+            def add(a, c_, small):
+                sl = tuple(slice(0, s) for s in small.shape)
+                a[sl] += np.asarray(small, np.float64) * wi
+                c_[sl] += wi
+
+            jax.tree.map(add, acc, cnt, p_i)
+            jax.tree.map(add, acc_s, cnt_s, s_i)
+
+        def finalize(a, c_, full):
+            out = np.asarray(full, np.float64).copy()
+            mask = c_ > 0
+            out[mask] = a[mask] / c_[mask]
+            return jnp.asarray(out, full.dtype)
+
+        params_full = jax.tree.map(finalize, acc, cnt, params_full)
+        state_full = jax.tree.map(finalize, acc_s, cnt_s, state_full)
+        rr = RoundResult(r, n_stages - 1, float(np.mean(losses)), selected=sel)
+        if eval_fn is not None and r % 10 == 0:
+            rr.test_acc = eval_fn(model_full, params_full, state_full)
+        history.append(rr)
+    return {"params": params_full, "state": state_full, "history": history,
+            "participation": 1.0, "model": model_full}
+
+
+# ---------------------------------------------------------------------------
+# TiFL / Oort (selection-strategy baselines; full model required)
+# ---------------------------------------------------------------------------
+
+
+def run_tifl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
+             batch_size: int = 32, clients_per_round: int = 10,
+             eval_fn=None, seed: int = 0, **kw) -> Dict:
+    model = CNN(cfg)
+    req = full_model_memory(model, batch_size)
+    eligible = [c for c in clients if c.memory_bytes >= req]
+    if not eligible:
+        return {"inoperative": True, "participation": 0.0, "history": []}
+    times = {c.client_id: c.num_samples / c.capability for c in eligible}
+    qs = np.quantile(list(times.values()), [0.33, 0.66])
+    tiers = {0: [], 1: [], 2: []}
+    for c in eligible:
+        t = times[c.client_id]
+        tiers[0 if t <= qs[0] else (1 if t <= qs[1] else 2)].append(c.client_id)
+    rng = np.random.RandomState(seed)
+    params, state = model.init(jax.random.PRNGKey(seed))
+    srv = FedAvgServer(model, eligible, batch_size=batch_size, seed=seed, **kw)
+    # monkey-select: restrict each round to one tier
+    history = []
+    for r in range(rounds):
+        tier = [t for t in tiers.values() if t][r % sum(1 for t in tiers.values() if t)]
+        sel_clients = [c for c in eligible if c.client_id in tier]
+        sub = FedAvgServer(model, sel_clients, batch_size=batch_size,
+                           clients_per_round=min(clients_per_round, len(sel_clients)),
+                           seed=seed + r)
+        res = sub.run(params, state, rounds=1,
+                      eval_fn=(lambda p, s, st: eval_fn(model, p, s))
+                      if (eval_fn and r % 10 == 0) else None)
+        params, state = res["params"], res["state"]
+        rr = res["history"][0]
+        rr.round_idx = r
+        history.append(rr)
+    return {"params": params, "state": state, "history": history,
+            "participation": len(eligible) / len(clients), "model": model}
+
+
+def run_oort(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
+             batch_size: int = 32, clients_per_round: int = 10,
+             eval_fn=None, seed: int = 0, local_epochs: int = 1) -> Dict:
+    from repro.core.selector.bandit import UtilBandit
+
+    model = CNN(cfg)
+    req = full_model_memory(model, batch_size)
+    eligible = [c for c in clients if c.memory_bytes >= req]
+    if not eligible:
+        return {"inoperative": True, "participation": 0.0, "history": []}
+    params, state = model.init(jax.random.PRNGKey(seed))
+    bandit = UtilBandit(epsilon=0.3, seed=seed)
+    opt = sgd(0.05)
+
+    def full_loss(p, st, batch):
+        return model.loss(p, st, batch, train=True)
+
+    @jax.jit
+    def step_fn(p, frozen_unused, st, opt_state, batch):
+        (loss, new_st), grads = jax.value_and_grad(full_loss, has_aux=True)(p, st, batch)
+        grads, _ = clip_by_global_norm(grads, 10.0)
+        ups, opt_state = opt.update(grads, opt_state, p)
+        return apply_updates(p, ups), new_st, opt_state, loss
+
+    history = []
+    n_stages = len(cfg.stage_sizes)
+    for r in range(rounds):
+        sel = bandit.pick([c.client_id for c in eligible],
+                          min(clients_per_round, len(eligible)))
+        updates, weights, losses = [], [], []
+        for cid in sel:
+            c = next(cl for cl in eligible if cl.client_id == cid)
+            p_i, s_i, loss_i, _ = c.local_train(step_fn, params, None, state,
+                                                opt.init(params),
+                                                batch_size=batch_size,
+                                                epochs=local_epochs, round_idx=r)
+            updates.append((p_i, s_i))
+            weights.append(c.num_samples)
+            losses.append(loss_i)
+            # Oort stat util: |D_i| sqrt(mean loss^2) - time penalty
+            t_i = c.num_samples / c.capability
+            bandit.update(cid, c.num_samples * np.sqrt(loss_i ** 2) - 0.1 * t_i)
+        bandit.next_round()
+        w = np.asarray(weights, np.float64)
+        w /= w.sum()
+        params = _weighted_avg([u[0] for u in updates], w)
+        state = _weighted_avg([u[1] for u in updates], w)
+        rr = RoundResult(r, n_stages - 1, float(np.mean(losses)), selected=list(sel))
+        if eval_fn is not None and r % 10 == 0:
+            rr.test_acc = eval_fn(model, params, state)
+        history.append(rr)
+    return {"params": params, "state": state, "history": history,
+            "participation": len(eligible) / len(clients), "model": model}

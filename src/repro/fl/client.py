@@ -1,0 +1,80 @@
+"""Simulated FL clients with heterogeneous memory / compute (paper §V-A).
+
+Each client owns a private shard of the dataset, a memory capacity drawn from
+the paper's two contention scenarios, and a runtime capability c_i. The local
+monitor reports (memory, capability, output-layer gradient (once), local
+loss) to the server — nothing else leaves the device.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.selector.selection import ClientInfo
+
+# Paper memory scenarios [3]: available RAM (GiB) under high / low contention
+HIGH_CONTENTION_GB = (0.5, 0.75, 1.0, 1.5, 2.0)
+LOW_CONTENTION_GB = (2.0, 3.0, 4.0, 6.0, 8.0)
+# Heterogeneous device tiers (relative FLOP/s; RPi ... Jetson TX2 ... phone)
+CAPABILITY_TIERS = (0.3e9, 1.0e9, 2.5e9, 5.0e9, 10.0e9)
+
+
+@dataclass
+class SimClient:
+    client_id: int
+    data: Dict[str, np.ndarray]
+    memory_bytes: float
+    capability: float
+    seed: int = 0
+    _head_grad: Optional[np.ndarray] = None
+
+    @property
+    def num_samples(self) -> int:
+        return len(self.data["y"]) if "y" in self.data else len(self.data["labels"])
+
+    def batches(self, batch_size: int, epochs: int, seed: int):
+        rng = np.random.RandomState(seed)
+        n = self.num_samples
+        for _ in range(epochs):
+            order = rng.permutation(n)
+            for i in range(0, n - batch_size + 1, batch_size):
+                idx = order[i:i + batch_size]
+                yield {k: v[idx] for k, v in self.data.items()}
+
+    def local_train(self, step_fn: Callable, active, frozen, bn_state, opt_state,
+                    *, batch_size: int, epochs: int, round_idx: int):
+        """Runs the jitted stage step over local minibatches.
+
+        Returns (active, bn_state, mean_loss, num_batches)."""
+        losses = []
+        for batch in self.batches(batch_size, epochs, self.seed * 99991 + round_idx):
+            jb = {k: jnp.asarray(v) for k, v in batch.items()}
+            active, bn_state, opt_state, loss = step_fn(active, frozen, bn_state,
+                                                        opt_state, jb)
+            losses.append(float(loss))
+        mean_loss = float(np.mean(losses)) if losses else 0.0
+        return active, bn_state, mean_loss, len(losses)
+
+    def info(self) -> ClientInfo:
+        return ClientInfo(self.client_id, self.memory_bytes, self.capability,
+                          self.num_samples)
+
+
+def make_client_fleet(data: Dict[str, np.ndarray], parts: List[np.ndarray], *,
+                      scenario: str = "low", seed: int = 0) -> List[SimClient]:
+    """Build a heterogeneous fleet from a dataset + index partition."""
+    rng = np.random.RandomState(seed)
+    mem_pool = HIGH_CONTENTION_GB if scenario == "high" else LOW_CONTENTION_GB
+    clients = []
+    for cid, idx in enumerate(parts):
+        local = {k: v[idx] for k, v in data.items()}
+        clients.append(SimClient(
+            client_id=cid, data=local,
+            memory_bytes=float(rng.choice(mem_pool)) * 2**30,
+            capability=float(rng.choice(CAPABILITY_TIERS)),
+            seed=seed + cid))
+    return clients

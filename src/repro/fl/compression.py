@@ -1,0 +1,60 @@
+"""Uplink update compression: top-k sparsification with error feedback.
+
+Clients upload parameter *deltas*; top-k keeps the k largest-magnitude
+entries per tensor and accumulates the residual locally (error feedback), so
+compression error is corrected over rounds instead of lost. Used on the
+federated uplink (client -> server) and available for the pod-level
+cross-silo aggregation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def topk_compress(delta, ratio: float) -> Dict:
+    """Keep the top `ratio` fraction of entries per leaf. Returns a sparse
+    representation {path: (indices, values, shape)}."""
+    out = {}
+    for i, leaf in enumerate(jax.tree.leaves(delta)):
+        flat = np.asarray(leaf, np.float32).ravel()
+        k = max(1, int(len(flat) * ratio))
+        idx = np.argpartition(np.abs(flat), -k)[-k:]
+        out[i] = (idx.astype(np.int32), flat[idx], leaf.shape)
+    return out
+
+
+def topk_decompress(sparse: Dict, treedef_like) -> object:
+    leaves = []
+    for i, leaf in enumerate(jax.tree.leaves(treedef_like)):
+        idx, vals, shape = sparse[i]
+        flat = np.zeros(int(np.prod(shape)), np.float32)
+        flat[idx] = vals
+        leaves.append(jnp.asarray(flat.reshape(shape), leaf.dtype))
+    return jax.tree.unflatten(jax.tree.structure(treedef_like), leaves)
+
+
+def compressed_bytes(sparse: Dict) -> int:
+    return sum(idx.nbytes + vals.nbytes for idx, vals, _ in sparse.values())
+
+
+@dataclass
+class ErrorFeedback:
+    """Per-client residual accumulator for biased compressors."""
+
+    ratio: float = 0.01
+    _residual: Optional[object] = None
+
+    def compress(self, delta) -> Tuple[Dict, object]:
+        if self._residual is not None:
+            delta = jax.tree.map(lambda d, r: d + r, delta, self._residual)
+        sparse = topk_compress(delta, self.ratio)
+        decompressed = topk_decompress(sparse, delta)
+        self._residual = jax.tree.map(lambda d, q: d - q.astype(jnp.float32),
+                                      jax.tree.map(lambda x: x.astype(jnp.float32), delta),
+                                      decompressed)
+        return sparse, decompressed

@@ -1,0 +1,265 @@
+"""FL servers: SmartFreeze orchestration + vanilla FedAvg (CNN testbed).
+
+SmartFreezeServer runs the full paper pipeline end to end:
+  (1) init: split model into T stages, collect local monitors' reports
+      (memory, capability, one-shot output-layer gradients, local loss);
+  (2) RL-CD communities from the Eq. 8 similarity matrix;
+  (3) per stage: participant selection (Eq. 11-14) -> rounds of local
+      training -> Eq. 1 aggregation -> pace controller observes the block
+      perturbation and freezes the stage when converged;
+  (4) model growth until the full model is trained.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import freezing_cnn as fz
+from repro.core.pace import PaceController
+from repro.core.selector import ParticipantSelector
+from repro.core.selector.similarity import similarity_matrix
+from repro.fl.client import SimClient
+from repro.models.cnn import CNN
+from repro.optim import Optimizer, sgd
+
+
+@dataclass
+class RoundResult:
+    round_idx: int
+    stage: int
+    loss: float
+    test_acc: Optional[float] = None
+    selected: List[int] = field(default_factory=list)
+    perturbation: Optional[float] = None
+    frozen: bool = False
+
+
+def cnn_stage_memory_bytes(model: CNN, stage: int, batch_size: int,
+                           image_size: int = 32) -> float:
+    """Eq. (4) for the CNN testbed (fp32)."""
+    cfg = model.cfg
+    res = image_size
+    act = 0.0
+    max_act = 0.0
+    params = 0.0
+    for i, (nb, ch) in enumerate(zip(cfg.stage_sizes, cfg.stage_channels)):
+        r = res // (2 ** i) if cfg.kind == "vgg" else max(res // (2 ** max(i, 0)), 4)
+        a = batch_size * r * r * ch * 4.0 * nb * 2  # convs per stage
+        max_act = max(max_act, a / max(nb, 1))
+        c_in = cfg.stage_channels[max(i - 1, 0)]
+        params += nb * (9 * c_in * ch + 9 * ch * ch) * 4.0
+        if i == stage:
+            act = a
+        if i >= stage:
+            break
+    opt = params * 2.0  # momentum
+    return 2 * act + params + opt + max_act
+
+
+class SmartFreezeServer:
+    def __init__(self, model: CNN, clients: List[SimClient], *,
+                 optimizer_fn: Callable[[], Optimizer] = lambda: sgd(0.05),
+                 clients_per_round: int = 10, local_epochs: int = 1,
+                 batch_size: int = 32, rounds_per_stage: int = 60,
+                 pace_kwargs: Optional[dict] = None,
+                 op_kind: str = "conv", selector: Optional[ParticipantSelector] = None,
+                 deadline_factor: float = 0.0, seed: int = 0):
+        self.model = model
+        self.clients = {c.client_id: c for c in clients}
+        self.optimizer_fn = optimizer_fn
+        self.k = clients_per_round
+        self.local_epochs = local_epochs
+        self.batch_size = batch_size
+        self.rounds_per_stage = rounds_per_stage
+        self.pace_kwargs = pace_kwargs or {}
+        self.op_kind = op_kind
+        self.selector = selector or ParticipantSelector(seed=seed)
+        self.deadline_factor = deadline_factor  # >0: drop stragglers past deadline
+        self.seed = seed
+        self.history: List[RoundResult] = []
+        self._last_loss: Dict[int, float] = {}
+
+    # ----- bootstrap: similarity from output-layer gradients (Eq. 8) -----
+
+    def bootstrap_similarity(self, params, state) -> np.ndarray:
+        grads = {}
+        for cid, c in self.clients.items():
+            x = jnp.asarray(c.data["x"][:64])
+            y = jnp.asarray(c.data["y"][:64])
+
+            def head_loss(fc):
+                logits, _ = self.model.apply({**params, "fc": fc}, state, x,
+                                             train=False)
+                lf = logits.astype(jnp.float32)
+                logz = jax.scipy.special.logsumexp(lf, axis=-1)
+                gold = jnp.take_along_axis(lf, y[:, None], axis=-1)[:, 0]
+                return jnp.mean(logz - gold)
+
+            g = jax.grad(head_loss)(params["fc"])
+            grads[cid] = np.concatenate([np.asarray(l, np.float32).ravel()
+                                         for l in jax.tree.leaves(g)])
+        return similarity_matrix(grads)
+
+    # ----- main loop -----
+
+    def run(self, params, state, *, eval_fn: Optional[Callable] = None,
+            eval_every: int = 10, total_rounds: Optional[int] = None,
+            schedule: Optional[List[int]] = None) -> Dict:
+        """schedule: optional fixed rounds-per-stage (pace-controller ablation)."""
+        model = self.model
+        n_stages = len(model.cfg.stage_sizes)
+        sim = self.bootstrap_similarity(params, state)
+        self.selector.fit_communities(sim)
+        rng = np.random.RandomState(self.seed)
+        round_idx = 0
+        budget = total_rounds or self.rounds_per_stage * n_stages
+
+        for stage in range(n_stages):
+            if schedule is not None:
+                plan_rounds = schedule[stage]
+            else:
+                # pace-adaptive budget: early freezes hand their unused rounds
+                # to later stages (reserve >=1 round per remaining stage)
+                remaining_stages = n_stages - stage - 1
+                plan_rounds = max(budget - round_idx - remaining_stages, 1)
+            pace = PaceController(**self.pace_kwargs)
+            frozen, active = fz.init_cnn_stage_active(
+                model, params, stage, jax.random.PRNGKey(self.seed + stage),
+                op_kind=self.op_kind)
+            opt = self.optimizer_fn()
+            step_fn = fz.make_cnn_stage_step(model, stage, opt, op_kind=self.op_kind)
+            mem_req = cnn_stage_memory_bytes(model, stage, self.batch_size)
+
+            for r in range(plan_rounds):
+                if round_idx >= budget:
+                    break
+                # --- selection (Eq. 11-14): I_{t,i} = |D_i| * latest local loss ---
+                infos = {cid: dataclasses.replace(
+                    c.info(),
+                    loss_sum=self._last_loss.get(cid, 1e3) * c.num_samples)
+                    for cid, c in self.clients.items()}
+                time_fn = lambda ci: ci.num_samples / ci.capability
+                selected = self.selector.select(infos, self.k,
+                                                mem_required=mem_req,
+                                                stage_time_fn=time_fn)
+                # --- deadline-based straggler mitigation ---
+                if self.deadline_factor > 0 and len(selected) > 2:
+                    times = {cid: time_fn(infos[cid]) for cid in selected}
+                    deadline = np.median(list(times.values())) * self.deadline_factor
+                    kept = [cid for cid in selected if times[cid] <= deadline]
+                    if len(kept) >= max(2, len(selected) // 2):
+                        selected = kept
+                # --- local training ---
+                updates, weights, losses = [], [], {}
+                for cid in selected:
+                    c = self.clients[cid]
+                    a_i, s_i, loss_i, _ = c.local_train(
+                        step_fn, active, frozen, state, opt.init(active),
+                        batch_size=self.batch_size, epochs=self.local_epochs,
+                        round_idx=round_idx)
+                    updates.append((a_i, s_i))
+                    weights.append(c.num_samples)
+                    losses[cid] = loss_i
+                self._last_loss.update(losses)
+                # --- Eq. 1 aggregation ---
+                w = np.asarray(weights, np.float64)
+                w = w / w.sum()
+                active = _weighted_avg([u[0] for u in updates], w)
+                state = _weighted_avg([u[1] for u in updates], w)
+                # --- pace controller ---
+                p = pace.observe(active.get("stages", active))
+                do_freeze = pace.should_freeze() and schedule is None
+                mean_loss = float(np.mean(list(losses.values())))
+                rr = RoundResult(round_idx, stage, mean_loss, selected=selected,
+                                 perturbation=p, frozen=do_freeze)
+                if eval_fn is not None and (round_idx % eval_every == 0 or do_freeze):
+                    merged = fz.merge_cnn_params(model, params, stage, active)
+                    rr.test_acc = eval_fn(merged, state, stage)
+                self.history.append(rr)
+                round_idx += 1
+                if do_freeze:
+                    break
+            # --- model growth ---
+            params = fz.merge_cnn_params(model, params, stage, active)
+        return {"params": params, "state": state, "history": self.history,
+                "rounds": round_idx}
+
+
+class FedAvgServer:
+    """Vanilla FL baseline: full model every round, random selection."""
+
+    def __init__(self, model: CNN, clients: List[SimClient], *,
+                 optimizer_fn=lambda: sgd(0.05), clients_per_round: int = 10,
+                 local_epochs: int = 1, batch_size: int = 32,
+                 mem_required: float = 0.0, seed: int = 0):
+        self.model = model
+        self.clients = {c.client_id: c for c in clients}
+        self.optimizer_fn = optimizer_fn
+        self.k = clients_per_round
+        self.local_epochs = local_epochs
+        self.batch_size = batch_size
+        self.mem_required = mem_required
+        self.seed = seed
+        self.history: List[RoundResult] = []
+
+    def run(self, params, state, *, rounds: int, eval_fn=None, eval_every=10):
+        model = self.model
+        n_stages = len(model.cfg.stage_sizes)
+        # "stage" = last stage trained jointly with everything: use full fwd
+        opt = self.optimizer_fn()
+
+        def full_loss(p, st, batch):
+            return model.loss(p, st, batch, train=True)
+
+        @jax.jit
+        def step_fn(p, frozen_unused, st, opt_state, batch):
+            (loss, new_st), grads = jax.value_and_grad(full_loss, has_aux=True)(
+                p, st, batch)
+            from repro.optim import apply_updates, clip_by_global_norm
+            grads, _ = clip_by_global_norm(grads, 10.0)
+            ups, opt_state = opt.update(grads, opt_state, p)
+            return apply_updates(p, ups), new_st, opt_state, loss
+
+        rng = np.random.RandomState(self.seed)
+        eligible = [cid for cid, c in self.clients.items()
+                    if c.memory_bytes >= self.mem_required]
+        for r in range(rounds):
+            if not eligible:
+                break
+            sel = list(rng.choice(eligible, size=min(self.k, len(eligible)),
+                                  replace=False))
+            updates, weights, losses = [], [], []
+            for cid in sel:
+                c = self.clients[cid]
+                p_i, s_i, loss_i, _ = c.local_train(
+                    step_fn, params, None, state, opt.init(params),
+                    batch_size=self.batch_size, epochs=self.local_epochs,
+                    round_idx=r)
+                updates.append((p_i, s_i))
+                weights.append(c.num_samples)
+                losses.append(loss_i)
+            w = np.asarray(weights, np.float64)
+            w /= w.sum()
+            params = _weighted_avg([u[0] for u in updates], w)
+            state = _weighted_avg([u[1] for u in updates], w)
+            rr = RoundResult(r, n_stages - 1, float(np.mean(losses)), selected=sel)
+            if eval_fn is not None and r % eval_every == 0:
+                rr.test_acc = eval_fn(params, state, n_stages - 1)
+            self.history.append(rr)
+        return {"params": params, "state": state, "history": self.history,
+                "participation": len(eligible) / len(self.clients)}
+
+
+def _weighted_avg(trees: List, w: np.ndarray):
+    out = trees[0]
+    out = jax.tree.map(lambda x: x.astype(jnp.float32) * float(w[0]), out)
+    for t, wi in zip(trees[1:], w[1:]):
+        out = jax.tree.map(lambda a, x: a + x.astype(jnp.float32) * float(wi),
+                           out, t)
+    ref = trees[0]
+    return jax.tree.map(lambda a, r: a.astype(r.dtype), out, ref)

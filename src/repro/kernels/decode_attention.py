@@ -1,0 +1,93 @@
+"""Flash-decode — Pallas TPU kernel for one-token decode against a long KV
+cache (the decode_32k / long_500k hot spot).
+
+One query token per sequence attends to S cached keys. Grid:
+(batch, q_heads, num_kv_blocks); scratch carries the running (m, l, acc)
+log-sum-exp merge across kv blocks — identical math to flash attention with
+block_q == 1, but the q row stays resident and kv streams HBM->VMEM at
+near-peak bandwidth (this op is purely memory-bound: arithmetic intensity
+~1 FLOP/byte).
+
+``length`` masks the valid cache prefix so a preallocated max-seq cache can
+be used. GQA via index_map head mapping (no kv repeat in HBM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, scale: float, block_k: int):
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[0]
+
+    @pl.when(kj * block_k < length)
+    def _body():
+        q = q_ref[0, 0, :].astype(jnp.float32)  # [dk]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # [bk, dk]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)  # [bk, dv]
+        s = jnp.sum(k * q[None, :], axis=1) * scale  # [bk]
+        pos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_prev = m_scr[0]
+        m_new = jnp.maximum(m_prev, jnp.max(s))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[0] = l_scr[0] * corr + jnp.sum(p)
+        acc_scr[...] = acc_scr[...] * corr + jnp.sum(p[:, None] * v, axis=0)
+        m_scr[0] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        o_ref[0, 0, :] = (acc_scr[...] / jnp.maximum(l_scr[0], 1e-30)
+                          ).astype(o_ref.dtype)
+
+
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     length, *, scale: float = None, block_k: int = 1024,
+                     interpret: bool = False) -> jnp.ndarray:
+    """q: [B, Hq, d]; k/v: [B, S, Hkv, d]; length: [B] int32 -> [B, Hq, dv]."""
+    B, Hq, dk = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = Hq // Hkv
+    scale = scale if scale is not None else dk ** -0.5
+    block_k = min(block_k, S)
+    assert S % block_k == 0
+    grid = (B, Hq, S // block_k)
+    kernel = functools.partial(_decode_kernel, scale=scale, block_k=block_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, dk), lambda b, h, j: (b, h, 0)),
+            pl.BlockSpec((1, block_k, 1, dk), lambda b, h, j: (b, j, h // g, 0)),
+            pl.BlockSpec((1, block_k, 1, dv), lambda b, h, j: (b, j, h // g, 0)),
+            pl.BlockSpec((1,), lambda b, h, j: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, dv), lambda b, h, j: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, dv), q.dtype),
+        scratch_shapes=[_vmem((1,), jnp.float32), _vmem((1,), jnp.float32),
+                        _vmem((dv,), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, length)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

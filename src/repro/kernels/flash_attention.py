@@ -1,0 +1,113 @@
+"""Causal flash attention forward — Pallas TPU kernel.
+
+Grid: (batch, q_heads, num_q_blocks, num_kv_blocks). TPU grids iterate the
+minor-most dim sequentially per core, so VMEM scratch (running max m, denom
+l, f32 accumulator) persists across the kv-block loop — the canonical online
+softmax. GQA is handled in the k/v index_maps (kv_head = q_head // group), so
+kv is never repeated in HBM. Causal skipping is a dynamic pl.when gate: fully
+masked kv blocks do no compute.
+
+Backward uses jax.custom_vjp with full recompute through the XLA blockwise
+reference (flash-style bwd kernel is a follow-up; recompute keeps memory at
+O(S) while staying exact).
+
+Block shapes default to (block_q=512, block_k=512) x head_dim — MXU-aligned
+(multiples of 128 in the contracted dim via head_dim, and 512 rows amortize
+the VPU softmax ops). VMEM footprint per step:
+q (512 x hd) + k,v (512 x hd) + acc (512 x hd f32) + s (512x512 f32) ~ 2.3 MB
+at hd=128 — comfortably inside the ~16 MB VMEM budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                      scale: float, causal: bool, block_q: int, block_k: int):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    def _body():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)  # [bq, dk]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # [bk, dk]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)  # [bk, dv]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            cols = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    if causal:
+        # dynamic structured skip: kv block strictly after the q block's end
+        pl.when(kj * block_k <= qi * block_q + block_q - 1)(_body)
+    else:
+        _body()
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True, scale: float = None,
+                        block_q: int = 512, block_k: int = 512,
+                        interpret: bool = False) -> jnp.ndarray:
+    """q: [B, S, Hq, d]; k/v: [B, S, Hkv, d]; Hq % Hkv == 0 -> [B, S, Hq, d]."""
+    B, S, Hq, dk = q.shape
+    Hkv = k.shape[2]
+    dv = v.shape[-1]
+    g = Hq // Hkv
+    scale = scale if scale is not None else dk ** -0.5
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    grid = (B, Hq, S // block_q, S // block_k)
+
+    kernel = functools.partial(_flash_fwd_kernel, scale=scale, causal=causal,
+                               block_q=block_q, block_k=block_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, dk), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, block_k, 1, dk), lambda b, h, i, j: (b, j, h // g, 0)),
+            pl.BlockSpec((1, block_k, 1, dv), lambda b, h, i, j: (b, j, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, dv), lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, Hq, dv), q.dtype),
+        scratch_shapes=[
+            _vmem((block_q,), jnp.float32),
+            _vmem((block_q,), jnp.float32),
+            _vmem((block_q, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

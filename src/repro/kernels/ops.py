@@ -1,0 +1,73 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only: the
+kernels execute their bodies in Python via the Pallas interpreter for
+correctness validation; on a TPU backend they compile to Mosaic).
+
+``flash_attention`` is differentiable: custom_vjp whose backward recomputes
+through the XLA blockwise reference (O(S) memory, exact).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import block_perturb, decode_attention as dec, flash_attention as fa
+from repro.kernels import ssm_scan as ssd
+from repro.kernels import ref
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ----- flash attention (differentiable) -----
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention(q, k, v, causal=True, scale=None):
+    return fa.flash_attention_fwd(q, k, v, causal=causal, scale=scale,
+                                  interpret=_default_interpret())
+
+
+def _fa_fwd(q, k, v, causal, scale):
+    return flash_attention(q, k, v, causal, scale), (q, k, v)
+
+
+def _fa_bwd(causal, scale, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: ref.flash_attention_ref(
+        q_, k_, v_, causal=causal, scale=scale), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+# ----- flash decode -----
+
+
+@jax.jit
+def flash_decode(q, k, v, length):
+    return dec.decode_attention(q, k, v, length,
+                                interpret=_default_interpret())
+
+
+# ----- ssd scan -----
+
+
+@jax.jit
+def ssd_scan(x, dt, log_a, Bm, Cm):
+    return ssd.ssd_scan(x, dt, log_a, Bm, Cm,
+                        interpret=_default_interpret())
+
+
+# ----- block perturbation reductions -----
+
+
+def update_sqnorm(tree_new, tree_old):
+    """On-mesh half of the pace controller: fused ||new - old||^2."""
+    return block_perturb.tree_diff_sqnorm(tree_new, tree_old,
+                                          interpret=_default_interpret())

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert_allclose vs these)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, scale=None):
+    """q: [B,S,Hq,d]; k/v: [B,S,Hkv,d]."""
+    B, S, Hq, d = q.shape
+    g = Hq // k.shape[2]
+    k = jnp.repeat(k, g, axis=2)
+    v = jnp.repeat(v, g, axis=2)
+    scale = scale if scale is not None else d ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, length, *, scale=None):
+    """q: [B,Hq,d]; k/v: [B,S,Hkv,d]; length: [B]."""
+    B, Hq, d = q.shape
+    S = k.shape[1]
+    g = Hq // k.shape[2]
+    k = jnp.repeat(k, g, axis=2)
+    v = jnp.repeat(v, g, axis=2)
+    scale = scale if scale is not None else d ** -0.5
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    valid = jnp.arange(S)[None, None, :] < length[:, None, None]
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, log_a, Bm, Cm):
+    """Sequential SSD recurrence (exact). x: [B,S,H,hd]; dt/log_a: [B,S,H];
+    Bm/Cm: [B,S,N] -> y: [B,S,H,hd]."""
+    B, S, H, hd = x.shape
+    N = Bm.shape[-1]
+
+    def step(h, inputs):
+        x_t, dt_t, la_t, b_t, c_t = inputs
+        a = jnp.exp(la_t)  # [B,H]
+        h = a[..., None, None] * h + jnp.einsum(
+            "bh,bhd,bN->bhdN", dt_t, x_t.astype(jnp.float32), b_t.astype(jnp.float32))
+        y = jnp.einsum("bN,bhdN->bhd", c_t.astype(jnp.float32), h)
+        return h, y
+
+    h0 = jnp.zeros((B, H, hd, N), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (x.transpose(1, 0, 2, 3),
+                                    dt.transpose(1, 0, 2).astype(jnp.float32),
+                                    log_a.transpose(1, 0, 2).astype(jnp.float32),
+                                    Bm.transpose(1, 0, 2),
+                                    Cm.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)
+
+
+def diff_sqnorm_ref(a, b):
+    d = a.astype(jnp.float32) - b.astype(jnp.float32)
+    return jnp.sum(d * d)

@@ -1,0 +1,389 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count on first init). No `from __future__` here for that reason.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this AOT-compiles the real step function against
+ShapeDtypeStruct inputs on the production mesh (no allocation), prints
+memory_analysis / cost_analysis, extracts the three roofline terms, and
+writes experiments/dryrun/<arch>__<shape>__<mesh>.json.
+
+Step per shape kind (paper-faithful baseline):
+  train_4k     -> federated progressive round: mid-stage SmartFreeze step,
+                  K local steps then the Eq. 1 pod all-reduce
+  prefill_32k  -> full forward, last-position logits
+  decode_*     -> one-token serve step against a seq_len KV cache
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k --mesh multi
+  python -m repro.launch.dryrun --all [--mesh both] [--out experiments/dryrun]
+"""
+
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs.base import ArchConfig, ShapeConfig, SHAPES, skip_reason
+from repro.core import freezing
+from repro.core.output_module import lm_op_abstract
+from repro.data.synthetic import input_specs
+from repro.dist.sharding import (fsdp_tree_shardings, make_rules, batch_spec)
+from repro.launch import mesh as mesh_mod
+from repro.launch.roofline import analyze_compiled
+from repro.models.transformer import build
+from repro.optim import sgd
+
+AXES_LEAF = lambda x: isinstance(x, tuple) and all(
+    a is None or isinstance(a, str) for a in x)
+
+
+# ---------------------------------------------------------------------------
+# Shardings
+# ---------------------------------------------------------------------------
+
+
+def param_shardings(cfg: ArchConfig, mesh, aparams, axes_tree, *,
+                    serve_tp: bool = False, opts=frozenset()):
+    """FSDP+TP by default. Hillclimb opts (EXPERIMENTS.md §Perf):
+    serve_tp   — TP-resident serve params (no per-token weight all-gathers)
+    fsdp_out   — FSDP only on weight OUTPUT dims (no contracting-dim shards)
+    no_tp      — replicate weights entirely (tiny archs)."""
+    rules = make_rules(cfg, mesh, no_tp="no_tp" in opts)
+    if serve_tp:
+        from repro.dist.sharding import tree_shardings
+        import numpy as _np
+
+        model_size = mesh.shape.get("model", 1)
+        total = sum(int(_np.prod(l.shape)) * l.dtype.itemsize
+                    for l in jax.tree.leaves(aparams))
+        if total / model_size < 12 * 2**30:  # fits: TP-resident
+            return tree_shardings(mesh, axes_tree, rules, aparams)
+    return fsdp_tree_shardings(mesh, axes_tree, rules, aparams,
+                               fsdp_axes=("data",),
+                               output_dim_only="fsdp_out" in opts)
+
+
+def cache_shardings(cfg: ArchConfig, mesh, acache, batch: int, *,
+                    seq_over_model: bool = False):
+    """Structural KV/state cache shardings (see dist/sharding.py doc).
+
+    ``seq_over_model`` (§Perf): when kv-heads cannot shard over "model"
+    (GQA kv < 16), shard the cache SEQ dim over "model" instead — removes the
+    16x cache replication (llama decode_32k: 34 GiB -> 2.1 GiB per chip);
+    attention's softmax/weighted-sum over the sharded seq lower to cheap
+    reduction collectives."""
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dp = int(np.prod([mesh.shape[a] for a in dp_axes]))
+    model_size = mesh.shape.get("model", 1)
+    batch_ax = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
+
+    def leaf_spec(path: Tuple[str, ...], leaf) -> NamedSharding:
+        name = path[-1]
+        shape = leaf.shape
+        nd = len(shape)
+        spec = [None] * nd
+        # layout: stacked caches are [L, B, ...]; shared-attn caches [B, ...]
+        b_dim = 1 if nd >= 2 and shape[0] != batch else 0
+        if shape[b_dim] == batch and batch % dp == 0 and dp > 1:
+            spec[b_dim] = batch_ax
+            batch_sharded = True
+        else:
+            batch_sharded = False
+        if name in ("k", "v"):
+            s_dim, h_dim = b_dim + 1, b_dim + 2
+            if not batch_sharded and "data" in mesh.shape \
+                    and shape[s_dim] % mesh.shape["data"] == 0:
+                spec[s_dim] = "data"  # flash-decode style seq sharding
+            if shape[h_dim] % model_size == 0 and shape[h_dim] >= model_size:
+                spec[h_dim] = "model"
+            elif seq_over_model and spec[s_dim] is None \
+                    and shape[s_dim] % model_size == 0:
+                spec[s_dim] = "model"
+        elif name == "ckv":
+            s_dim, l_dim = b_dim + 1, b_dim + 2
+            if not batch_sharded and "data" in mesh.shape \
+                    and shape[s_dim] % mesh.shape["data"] == 0:
+                spec[s_dim] = "data"
+            if shape[l_dim] % model_size == 0:
+                spec[l_dim] = "model"
+        elif name == "kpe":
+            pass  # small shared-head rope cache: replicate
+        elif name in ("h", "C"):  # ssm/mlstm state [*, B, H, ...]
+            h_dim = b_dim + 1
+            if shape[h_dim] % model_size == 0 and shape[h_dim] >= model_size:
+                spec[h_dim] = "model"
+        elif name == "conv":  # [*, B, k-1, C]
+            c_dim = b_dim + 2
+            if c_dim < nd and shape[c_dim] % model_size == 0:
+                spec[c_dim] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    from repro.models.module import tree_paths
+
+    flat = {path: leaf_spec(path, leaf) for path, leaf in tree_paths(acache)}
+    out: Dict = {}
+    for path, sh in flat.items():
+        node = out
+        for k in path[:-1]:
+            node = node.setdefault(k, {})
+        node[path[-1]] = sh
+    return out
+
+
+def batch_shardings(cfg: ArchConfig, mesh, specs: Dict, kind: str):
+    """Token/frame batch shardings per shape kind."""
+    multi = "pod" in mesh.shape
+    out = {}
+    for k, sds in specs.items():
+        nd = len(sds.shape)
+        if kind == "train":
+            # [pods, local_steps, per_pod_batch, ...]
+            spec = [None] * nd
+            if multi:
+                spec[0] = "pod"
+            if sds.shape[2] % mesh.shape["data"] == 0:
+                spec[2] = "data"
+            out[k] = NamedSharding(mesh, P(*spec))
+        else:
+            out[k] = batch_spec(mesh, nd)
+            dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+            dp = int(np.prod([mesh.shape[a] for a in dp_axes]))
+            if sds.shape[0] % dp != 0:  # e.g. long_500k batch=1
+                out[k] = NamedSharding(mesh, P(*([None] * nd)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cell lowering
+# ---------------------------------------------------------------------------
+
+
+def lower_train_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *,
+                     stage: Optional[int] = None, local_steps: int = 1,
+                     remat: bool = True, vanilla: bool = False,
+                     opts=frozenset()):
+    """Federated progressive train step (or vanilla full-model when asked)."""
+    cfg = dataclasses.replace(cfg, batch_axes=("data",))  # pod consumed by vmap
+    model = build(cfg)
+    aparams = model.abstract_params()
+    axes = model.axes_tree()
+    num_pods = mesh.shape.get("pod", 1)
+    if vanilla:
+        plan = freezing.make_stage_plan(cfg, None)
+    else:
+        stage = cfg.num_freeze_blocks // 2 if stage is None else stage
+        plan = freezing.make_stage_plan(cfg, stage)
+
+    # slicing stacked leaves is not defined on ShapeDtypeStructs — trace the
+    # (init ∘ split) composition abstractly instead
+    afrozen, aactive = jax.eval_shape(
+        lambda: freezing.split_stage_params(
+            model, model.init(jax.random.PRNGKey(0)), plan))
+    xfrozen, xactive = freezing.split_stage_axes(model, axes, plan)
+    if not plan.final:
+        aop, xop = lm_op_abstract(cfg, plan.stage)
+        aactive["op"] = aop
+        xactive["op"] = xop
+
+    sh_frozen = param_shardings(cfg, mesh, afrozen, xfrozen, opts=opts)
+    sh_active = param_shardings(cfg, mesh, aactive, xactive, opts=opts)
+
+    pod_param_spec = jax.tree.map(
+        lambda s: NamedSharding(mesh, P(*(("pod",) + tuple(s.spec)))) if num_pods > 1
+        else NamedSharding(mesh, P(*((None,) + tuple(s.spec)))),
+        sh_active, is_leaf=lambda x: isinstance(x, NamedSharding))
+
+    def constrain(podded):
+        return jax.tree.map(jax.lax.with_sharding_constraint, podded, pod_param_spec)
+
+    remat_policy = (jax.checkpoint_policies.dots_saveable
+                    if "save_dots" in opts else None)
+    step = freezing.make_fed_round_step(
+        model, plan, sgd(1e-2), num_pods=num_pods, local_steps=local_steps,
+        remat=remat, constrain_podded=constrain, remat_policy=remat_policy)
+
+    specs = input_specs(cfg, shape, num_pods=num_pods, local_steps=local_steps)
+    sh_batch = batch_shardings(cfg, mesh, specs, "train")
+    aweights = jax.ShapeDtypeStruct((num_pods,), jnp.float32)
+    sh_w = NamedSharding(mesh, P("pod" if num_pods > 1 else None))
+
+    with jax.set_mesh(mesh):
+        jitted = jax.jit(step,
+                         in_shardings=(sh_active, sh_frozen, sh_batch, sh_w),
+                         out_shardings=(sh_active, None))
+        lowered = jitted.lower(aactive, afrozen, specs, aweights)
+    return lowered
+
+
+def lower_prefill_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *,
+                       opts=frozenset()):
+    model = build(cfg)
+    aparams = model.abstract_params()
+    axes = model.axes_tree()
+    sh_params = param_shardings(cfg, mesh, aparams, axes,
+                                serve_tp="serve_tp" in opts, opts=opts)
+    specs = input_specs(cfg, shape)
+    sh_batch = batch_shardings(cfg, mesh, specs, "prefill")
+
+    def prefill(params, batch):
+        logits, _ = model.forward(params, batch)
+        return logits[:, -1, :]  # next-token logits
+
+    with jax.set_mesh(mesh):
+        jitted = jax.jit(prefill, in_shardings=(sh_params, sh_batch),
+                         out_shardings=None)
+        lowered = jitted.lower(aparams, specs)
+    return lowered
+
+
+def lower_decode_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *,
+                      opts=frozenset()):
+    model = build(cfg)
+    aparams = model.abstract_params()
+    axes = model.axes_tree()
+    sh_params = param_shardings(cfg, mesh, aparams, axes,
+                                serve_tp="serve_tp" in opts, opts=opts)
+    B, S = shape.global_batch, shape.seq_len
+    acache = jax.eval_shape(lambda: model.init_cache(B, S))
+    sh_cache = cache_shardings(cfg, mesh, acache, B,
+                               seq_over_model="cache_sm" in opts)
+    specs = input_specs(cfg, shape)
+    sh_batch = batch_shardings(cfg, mesh, specs, "decode")
+    apos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def serve_step(params, cache, batch, pos):
+        return model.decode_step(params, batch, cache, pos)
+
+    donate = (1,) if "donate" in opts else ()
+    with jax.set_mesh(mesh):
+        jitted = jax.jit(serve_step,
+                         in_shardings=(sh_params, sh_cache, sh_batch, None),
+                         out_shardings=(None, sh_cache),
+                         donate_argnums=donate)
+        lowered = jitted.lower(aparams, acache, specs, apos)
+    return lowered
+
+
+def lower_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *, opts=frozenset(), **kw):
+    if shape.kind == "train":
+        return lower_train_cell(cfg, shape, mesh, opts=opts, **kw)
+    if shape.kind == "prefill":
+        return lower_prefill_cell(cfg, shape, mesh, opts=opts)
+    return lower_decode_cell(cfg, shape, mesh, opts=opts)
+
+
+# ---------------------------------------------------------------------------
+# Runner
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             out_dir: str = "experiments/dryrun", verbose: bool = True,
+             **kw) -> Dict:
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    skip = skip_reason(cfg, shape)
+    result: Dict = {"arch": arch, "shape": shape_name, "mesh": mesh_kind}
+    if skip:
+        result["skipped"] = skip
+        _write(out_dir, result)
+        return result
+    mesh = mesh_mod.make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    try:
+        lowered = lower_cell(cfg, shape, mesh, **kw)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        if verbose:
+            print(f"[{arch} x {shape_name} x {mesh_kind}] "
+                  f"lower {t_lower:.0f}s compile {t_compile:.0f}s")
+            print(" ", mem)
+            print(" ", {k: v for k, v in (compiled.cost_analysis() or {}).items()
+                        if k in ("flops", "bytes accessed")})
+        result.update(analyze_compiled(compiled, mesh, cfg, shape))
+        result["lower_s"] = round(t_lower, 1)
+        result["compile_s"] = round(t_compile, 1)
+        result["ok"] = True
+        if os.environ.get("REPRO_SAVE_HLO", "1") == "1":
+            import gzip
+            os.makedirs(os.path.join(out_dir, "hlo"), exist_ok=True)
+            with gzip.open(os.path.join(
+                    out_dir, "hlo",
+                    f"{arch}__{shape_name}__{mesh_kind}.hlo.gz"), "wt") as fh:
+                fh.write(compiled.as_text())
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        result["ok"] = False
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[{arch} x {shape_name} x {mesh_kind}] FAILED: {result['error']}")
+    _write(out_dir, result)
+    return result
+
+
+def _write(out_dir: str, result: Dict):
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{result['arch']}__{result['shape']}__{result['mesh']}.json"
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(result, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--vanilla", action="store_true",
+                    help="full-model step instead of the SmartFreeze stage step")
+    ap.add_argument("--stage", type=int, default=None)
+    ap.add_argument("--local-steps", type=int, default=1)
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--opt", default="", help="comma-separated hillclimb opts")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        archs = [n for n in configs.names()]
+        cells = [(a, s.name) for a in archs
+                 for s in (SHAPES.values())]
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape)]
+
+    ok = fail = skip = 0
+    for arch, shape in cells:
+        for mk in meshes:
+            r = run_cell(arch, shape, mk, out_dir=args.out,
+                         vanilla=args.vanilla, stage=args.stage,
+                         local_steps=args.local_steps,
+                         opts=frozenset(o for o in args.opt.split(",") if o))
+            if r.get("skipped"):
+                skip += 1
+            elif r.get("ok"):
+                ok += 1
+            else:
+                fail += 1
+    print(f"dry-run complete: {ok} ok, {fail} failed, {skip} skipped")
+    if fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

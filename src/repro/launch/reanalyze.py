@@ -1,0 +1,62 @@
+"""Re-derive roofline terms from saved gzipped HLO (no recompile).
+
+Usage: PYTHONPATH=src python -m repro.launch.reanalyze [out_dir]
+Rewrites the metric fields of every experiments/dryrun/*.json whose HLO was
+saved, using the current roofline parser.
+"""
+from __future__ import annotations
+
+import glob
+import gzip
+import json
+import os
+import sys
+
+from repro import configs
+from repro.configs.base import SHAPES
+from repro.core.memory_model import model_flops_6nd
+from repro.launch import mesh as mesh_mod
+from repro.launch.roofline import hlo_weighted_costs
+
+
+def reanalyze(out_dir: str = "experiments/dryrun"):
+    n = 0
+    for jf in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        r = json.load(open(jf))
+        if not r.get("ok"):
+            continue
+        hf = os.path.join(out_dir, "hlo",
+                          f"{r['arch']}__{r['shape']}__{r['mesh']}.hlo.gz")
+        if not os.path.exists(hf):
+            continue
+        hlo = gzip.open(hf, "rt").read()
+        w = hlo_weighted_costs(hlo)
+        cfg = configs.get(r["arch"])
+        shape = SHAPES[r["shape"]]
+        n_chips = 512 if r["mesh"] == "multi" else 256
+        compute_s = w["flops"] / mesh_mod.PEAK_FLOPS_BF16
+        memory_s = w["bytes"] / mesh_mod.HBM_BW
+        collective_s = w["collective_bytes"] / mesh_mod.ICI_BW
+        terms = {"compute_s": compute_s, "memory_s": memory_s,
+                 "collective_s": collective_s}
+        mf = model_flops_6nd(cfg, shape.global_batch,
+                             shape.seq_len if shape.kind in ("train", "prefill") else 1)
+        if shape.kind != "train":
+            mf /= 3.0
+        bound = max(terms.values())
+        r.update(per_chip_flops=w["flops"], per_chip_bytes=w["bytes"],
+                 collective_bytes=w["collective_bytes"],
+                 collective_by_op={k: int(v) for k, v in w["collective_by_op"].items()},
+                 compute_s=compute_s, memory_s=memory_s,
+                 collective_s=collective_s,
+                 dominant=max(terms, key=terms.get).replace("_s", ""),
+                 model_flops_6nd=mf,
+                 useful_flops_ratio=(mf / n_chips) / w["flops"] if w["flops"] else None,
+                 roofline_fraction=compute_s / bound if bound else None)
+        json.dump(r, open(jf, "w"), indent=1)
+        n += 1
+    print(f"reanalyzed {n} cells")
+
+
+if __name__ == "__main__":
+    reanalyze(sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun")

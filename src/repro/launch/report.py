@@ -1,0 +1,67 @@
+"""Render the roofline table from experiments/dryrun/*.json (markdown)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x < 1e-3:
+        return f"{x * 1e6:.0f}us"
+    if x < 1:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def load(out_dir="experiments/dryrun"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def table(rows, mesh="single"):
+    hdr = ("| arch | shape | compute | memory | collective | dominant | "
+           "useful-FLOPs | roofline-frac | peak GiB/chip |")
+    sep = "|" + "---|" * 9
+    out = [hdr, sep]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        if r.get("skipped"):
+            out.append(f"| {r['arch']} | {r['shape']} | skip | | | | | | "
+                       f"{r['skipped'][:46]} |")
+            continue
+        if not r.get("ok"):
+            out.append(f"| {r['arch']} | {r['shape']} | FAIL | | | | | | |")
+            continue
+        peak = (r.get("memory_analysis") or {}).get("peak_bytes")
+        peak_s = f"{peak / 2**30:.1f}" if peak else "-"
+        uf = r.get("useful_flops_ratio")
+        rf = r.get("roofline_fraction")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"{r['dominant']} | {uf:.2f} | {rf:.2f} | {peak_s} |"
+            if uf is not None and rf is not None else
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"{r['dominant']} | - | - | {peak_s} |")
+    return "\n".join(out)
+
+
+def main():
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    rows = load(out_dir)
+    for mesh in ("single", "multi"):
+        n = sum(1 for r in rows if r["mesh"] == mesh)
+        print(f"\n### {mesh}-pod mesh ({n} cells)\n")
+        print(table(rows, mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,305 @@
+"""Three-term roofline extraction from a compiled dry-run artifact.
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOP/s
+    memory     = HLO_bytes_per_chip / HBM_bw
+    collective = collective_bytes_per_chip / ICI_bw
+
+IMPORTANT METHODOLOGY NOTE: ``compiled.cost_analysis()`` counts while-loop
+bodies ONCE — a scan-over-layers train step under-reports FLOPs by ~L×
+(verified empirically; see tests/test_roofline_parser.py). We therefore parse
+the optimized HLO text ourselves and weight every instruction by the product
+of its enclosing while-loops' trip counts:
+
+  * FLOPs: every ``dot`` op contributes 2 * prod(result dims) * prod(lhs
+    contracting dim sizes). (Elementwise FLOPs are ignored — dots dominate
+    the compute term; softmax/norm traffic shows up in the memory term.)
+  * bytes: fusions contribute their parameter reads + result write; other
+    ops contribute 2x result bytes (read+write amortized) — an HBM-traffic
+    estimate assuming each materialized buffer is written once and read once.
+  * collectives: result-shape bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute.
+
+Raw cost_analysis numbers are kept alongside for reference.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.launch import mesh as mesh_mod
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_dims(shape_str: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.match(shape_str)
+    if not m or m.group(1) not in _DTYPE_BYTES:
+        return None
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+# ---------------------------------------------------------------------------
+# HLO structural parsing
+# ---------------------------------------------------------------------------
+
+
+def _parse_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        s = line.strip()
+        # header: [ENTRY] %name (params...) -> result { — params may nest parens
+        m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{$", s)
+        if m:
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if s == "}" or s == "})":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(s)
+    return comps
+
+
+def _while_trip_count(cond_lines: List[str]) -> Optional[int]:
+    consts = []
+    for line in cond_lines:
+        m = re.search(r"s32\[\]\s+constant\((\d+)\)", line)
+        if m:
+            consts.append(int(m.group(1)))
+    return max(consts) if consts else None
+
+
+def _called_computations(line: str) -> List[str]:
+    names = []
+    for key in ("body=", "condition=", "to_apply=", "calls="):
+        for m in re.finditer(key + r"%?([\w\.\-]+)", line):
+            names.append(m.group(1))
+    return names
+
+
+def _multipliers(comps: Dict[str, List[str]]) -> Dict[str, int]:
+    """computation -> product of enclosing while trip counts."""
+    called = set()
+    for lines in comps.values():
+        for line in lines:
+            called.update(_called_computations(line))
+    roots = [n for n in comps if n not in called]
+    mult: Dict[str, int] = {}
+    stack = [(r, 1) for r in roots]
+    seen = set()
+    while stack:
+        name, m = stack.pop()
+        if (name, m) in seen:
+            continue
+        seen.add((name, m))
+        mult[name] = max(mult.get(name, 0), m)
+        for line in comps.get(name, []):
+            trip = 1
+            if re.search(r"\bwhile\(", line):
+                mm = re.search(r"condition=%?([\w\.\-]+)", line)
+                tc = _while_trip_count(comps.get(mm.group(1), [])) if mm else None
+                trip = tc if tc else 1
+            for c in _called_computations(line):
+                stack.append((c, m * trip))
+    return mult
+
+
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)\(")
+_DOT_OPERANDS_RE = re.compile(r"\bdot\(\s*%?([\w\.\-]+)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _symbol_table(lines: List[str]) -> Dict[str, str]:
+    """instruction name -> result shape string (within one computation)."""
+    table: Dict[str, str] = {}
+    for line in lines:
+        m = _INSTR_RE.match(line)
+        if m:
+            table[m.group(1)] = m.group(2)
+    return table
+
+
+def _dot_flops(line: str, table: Dict[str, str]) -> int:
+    """dot FLOPs = 2 * prod(result dims) * prod(lhs contracting dim sizes).
+
+    HLO operands are bare names — lhs shape is resolved via the computation's
+    symbol table."""
+    m = _INSTR_RE.match(line)
+    if not m or m.group(3) != "dot":
+        return 0
+    out = _shape_dims(m.group(2))
+    om = _DOT_OPERANDS_RE.search(line)
+    if out is None or om is None:
+        return 0
+    lhs_shape = table.get(om.group(1))
+    lhs = _shape_dims(lhs_shape) if lhs_shape else None
+    cm = _LHS_CONTRACT_RE.search(line)
+    contract = 1
+    if lhs is not None and cm and cm.group(1):
+        for idx in cm.group(1).split(","):
+            i = int(idx)
+            if i < len(lhs[1]):
+                contract *= lhs[1][i]
+    n_out = 1
+    for d in out[1]:
+        n_out *= d
+    return 2 * n_out * contract
+
+
+def _fusion_param_bytes(lines: List[str]) -> int:
+    total = 0
+    for line in lines:
+        if re.search(r"=\s*\S+\s+parameter\(", line):
+            m = re.search(r"=\s*(\([^)]*\)|\S+)\s+parameter\(", line)
+            if m:
+                total += _shape_bytes(m.group(1))
+    return total
+
+
+def hlo_weighted_costs(hlo: str) -> Dict[str, float]:
+    """Trip-count-weighted (flops, traffic bytes, collective bytes)."""
+    comps = _parse_computations(hlo)
+    mult = _multipliers(comps)
+    # fusion computations: counted via their call sites
+    fusion_comps = set()
+    for lines in comps.values():
+        for line in lines:
+            if re.search(r"\bfusion\(", line):
+                for c in _called_computations(line):
+                    fusion_comps.add(c)
+
+    flops = 0.0
+    traffic = 0.0
+    coll_total = 0.0
+    coll_by_op = {op: 0.0 for op in COLLECTIVE_OPS}
+    # aliasing / buffer-plumbing ops: no HBM traffic of their own
+    plumbing = ("parameter", "constant", "tuple", "get-tuple-element",
+                "bitcast", "bitcast-convert", "copy-start", "copy-done",
+                "reshape", "after-all", "iota", "while", "conditional",
+                "call", "custom-call", "partition-id", "replica-id")
+    for name, lines in comps.items():
+        m = mult.get(name, 1)
+        in_fusion = name in fusion_comps
+        table = _symbol_table(lines)
+        for line in lines:
+            f = _dot_flops(line, table)
+            if f:
+                flops += f * m
+            if in_fusion:
+                continue  # traffic counted at the fusion call site
+            im = _INSTR_RE.match(line)
+            if im and im.group(3) in plumbing:
+                continue
+            # result shape = first token after '='
+            if "=" not in line:
+                continue
+            rhs = line.split("=", 1)[1].strip()
+            shape_str = rhs.split(" ", 1)[0]
+            rbytes = _shape_bytes(shape_str)
+            is_coll = False
+            for op in COLLECTIVE_OPS:
+                if re.search(rf"\b{op}(-start)?\(", rhs):
+                    coll_total += rbytes * m
+                    coll_by_op[op] += rbytes * m
+                    is_coll = True
+                    break
+            fm = re.search(r"\bfusion\(.*calls=%?([\w\.\-]+)", rhs)
+            if fm:
+                traffic += (rbytes + _fusion_param_bytes(
+                    comps.get(fm.group(1), []))) * m
+            elif not is_coll:
+                traffic += 2 * rbytes * m
+    return {"flops": flops, "bytes": traffic, "collective_bytes": coll_total,
+            "collective_by_op": coll_by_op}
+
+
+def collective_bytes(hlo: str) -> Tuple[int, Dict[str, int]]:
+    out = hlo_weighted_costs(hlo)
+    return int(out["collective_bytes"]), {k: int(v) for k, v in
+                                          out["collective_by_op"].items()}
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms
+# ---------------------------------------------------------------------------
+
+
+def analyze_compiled(compiled, mesh, cfg, shape) -> Dict:
+    from repro.core.memory_model import model_flops_6nd
+
+    n_chips = mesh.size
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    w = hlo_weighted_costs(hlo)
+
+    compute_s = w["flops"] / mesh_mod.PEAK_FLOPS_BF16
+    memory_s = w["bytes"] / mesh_mod.HBM_BW
+    collective_s = w["collective_bytes"] / mesh_mod.ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    mf = model_flops_6nd(cfg, shape.global_batch,
+                         shape.seq_len if shape.kind == "train" else
+                         (shape.seq_len if shape.kind == "prefill" else 1))
+    if shape.kind != "train":
+        mf /= 3.0  # forward only
+
+    mem_an = {}
+    try:
+        ma = compiled.memory_analysis()
+        mem_an = {"output_bytes": getattr(ma, "output_size_in_bytes", None),
+                  "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+                  "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+                  "peak_bytes": (getattr(ma, "temp_size_in_bytes", 0) or 0)
+                  + (getattr(ma, "argument_size_in_bytes", 0) or 0)}
+    except Exception:  # noqa: BLE001
+        pass
+
+    bound_s = max(terms.values())
+    return {
+        "n_chips": n_chips,
+        "per_chip_flops": w["flops"],
+        "per_chip_bytes": w["bytes"],
+        "collective_bytes": w["collective_bytes"],
+        "collective_by_op": {k: int(v) for k, v in w["collective_by_op"].items()},
+        "raw_cost_analysis_flops": float(cost.get("flops", 0.0)),
+        "raw_cost_analysis_bytes": float(cost.get("bytes accessed", 0.0)),
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant.replace("_s", ""),
+        "model_flops_6nd": mf,
+        "useful_flops_ratio": (mf / n_chips) / w["flops"] if w["flops"] else None,
+        "roofline_fraction": compute_s / bound_s if bound_s else None,
+        "tokens": shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1),
+        "memory_analysis": mem_an,
+    }

@@ -1,0 +1,196 @@
+"""CNNs for the faithful paper reproduction: ResNet10/18, VGG11_bn/VGG16_bn.
+
+These mirror the paper's simulation testbed (CIFAR10/100). The model exposes
+the same decomposed interface as the LM (stem / run_stages(lo,hi) / head) so
+SmartFreeze's progressive trainer drives both. BatchNorm running stats live in
+a separate ``state`` tree (FedAvg aggregates them like parameters, per paper).
+
+Stage specs also drive the paper's output-module construction (core/
+output_module.py): each remaining stage is emulated by one stride-matched
+conv layer, preserving the trained block's "position" in the architecture.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import batchnorm, batchnorm_init, conv2d, conv2d_init
+from repro.models.module import PFac, Params
+
+
+@dataclass(frozen=True)
+class CNNConfig:
+    name: str
+    kind: str  # resnet | vgg
+    num_classes: int = 10
+    # resnet: blocks per stage; vgg: convs per stage
+    stage_sizes: Tuple[int, ...] = (2, 2, 2, 2)
+    stage_channels: Tuple[int, ...] = (64, 128, 256, 512)
+    in_channels: int = 3
+    num_freeze_blocks: int = 4
+
+    def block_boundaries(self) -> Tuple[int, ...]:
+        """SmartFreeze blocks == network stages (paper: ResNet-18 -> 4 blocks)."""
+        n = len(self.stage_sizes)
+        return tuple(range(n + 1))
+
+
+RESNET10 = CNNConfig("resnet10", "resnet", stage_sizes=(1, 1, 1, 1))
+RESNET18 = CNNConfig("resnet18", "resnet", stage_sizes=(2, 2, 2, 2))
+VGG11 = CNNConfig("vgg11_bn", "vgg", stage_sizes=(1, 1, 2, 2, 2),
+                  stage_channels=(64, 128, 256, 512, 512))
+VGG16 = CNNConfig("vgg16_bn", "vgg", stage_sizes=(2, 2, 3, 3, 3),
+                  stage_channels=(64, 128, 256, 512, 512))
+
+CNN_REGISTRY = {c.name: c for c in (RESNET10, RESNET18, VGG11, VGG16)}
+
+
+# ---------------------------------------------------------------------------
+# ResNet pieces
+# ---------------------------------------------------------------------------
+
+
+def _basic_block_init(fac: PFac, c_in: int, c_out: int) -> Tuple[Params, Params]:
+    p: Params = {}
+    s: Params = {}
+    p["conv1"] = conv2d_init(fac, "conv1", c_in, c_out, 3, bias=False)
+    p["bn1"], s["bn1"] = batchnorm_init(fac, "bn1", c_out)
+    p["conv2"] = conv2d_init(fac, "conv2", c_out, c_out, 3, bias=False)
+    p["bn2"], s["bn2"] = batchnorm_init(fac, "bn2", c_out)
+    if c_in != c_out:
+        p["proj"] = conv2d_init(fac, "proj", c_in, c_out, 1, bias=False)
+        p["bn_proj"], s["bn_proj"] = batchnorm_init(fac, "bn_proj", c_out)
+    return p, s
+
+
+def _basic_block(p: Params, s: Params, x: jnp.ndarray, stride: int, *, train: bool
+                 ) -> Tuple[jnp.ndarray, Params]:
+    ns: Params = {}
+    h = conv2d(p["conv1"], x, stride=stride)
+    h, ns["bn1"] = batchnorm(p["bn1"], s["bn1"], h, train=train)
+    h = jax.nn.relu(h)
+    h = conv2d(p["conv2"], h)
+    h, ns["bn2"] = batchnorm(p["bn2"], s["bn2"], h, train=train)
+    if "proj" in p:
+        sc = conv2d(p["proj"], x, stride=stride)
+        sc, ns["bn_proj"] = batchnorm(p["bn_proj"], s["bn_proj"], sc, train=train)
+    else:
+        sc = x if stride == 1 else x[:, ::stride, ::stride, :]
+    return jax.nn.relu(h + sc), ns
+
+
+# ---------------------------------------------------------------------------
+# CNN model
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class CNN:
+    cfg: CNNConfig
+
+    def init(self, rng) -> Tuple[Params, Params]:
+        cfg = self.cfg
+        fac = PFac(rng, dtype=jnp.float32)
+        p: Params = {}
+        s: Params = {}
+        if cfg.kind == "resnet":
+            sf = fac.sub("stem")
+            bn_p, s["stem_bn"] = batchnorm_init(sf, "bn", cfg.stage_channels[0])
+            p["stem"] = {"conv": conv2d_init(sf, "conv", cfg.in_channels,
+                                             cfg.stage_channels[0], 3, bias=False),
+                         "bn": bn_p}
+        stages: Params = {}
+        sstates: Params = {}
+        c_prev = cfg.stage_channels[0] if cfg.kind == "resnet" else cfg.in_channels
+        for i, (nb, ch) in enumerate(zip(cfg.stage_sizes, cfg.stage_channels)):
+            sf = fac.sub(f"stage{i}")
+            blocks: Params = {}
+            bstates: Params = {}
+            for j in range(nb):
+                bf = sf.sub(f"b{j}")
+                if cfg.kind == "resnet":
+                    bp, bs = _basic_block_init(bf, c_prev if j == 0 else ch, ch)
+                else:  # vgg: conv-bn-relu
+                    bp = {"conv": conv2d_init(bf, "conv", c_prev if j == 0 else ch, ch, 3)}
+                    bp["bn"], bs0 = batchnorm_init(bf, "bn", ch)
+                    bs = {"bn": bs0}
+                blocks[f"b{j}"] = bp
+                bstates[f"b{j}"] = bs
+            stages[f"stage{i}"] = blocks
+            sstates[f"stage{i}"] = bstates
+            c_prev = ch
+        p["stages"] = stages
+        s["stages"] = sstates
+        p["fc"] = {"w": fac.param("fc_w", (cfg.stage_channels[-1], cfg.num_classes),
+                                  (None, None), init="normal"),
+                   "b": fac.param("fc_b", (cfg.num_classes,), (None,), init="zeros")}
+        return p, s
+
+    # ----- stage-decomposed forward -----
+
+    def stem(self, params: Params, state: Params, x: jnp.ndarray, *, train: bool):
+        if self.cfg.kind != "resnet":
+            return x, state
+        h = conv2d(params["stem"]["conv"], x)
+        h, bn = batchnorm(params["stem"]["bn"], state["stem_bn"], h, train=train)
+        new_state = dict(state)
+        new_state["stem_bn"] = bn
+        return jax.nn.relu(h), new_state
+
+    def run_stages(self, params: Params, state: Params, h: jnp.ndarray,
+                   lo: int, hi: int, *, train: bool):
+        cfg = self.cfg
+        new_state = {k: v for k, v in state.items()}
+        new_stages = dict(state["stages"])
+        for i in range(lo, hi):
+            blocks = params["stages"][f"stage{i}"]
+            bstates = state["stages"][f"stage{i}"]
+            nbs: Params = {}
+            for j in range(cfg.stage_sizes[i]):
+                bp, bs = blocks[f"b{j}"], bstates[f"b{j}"]
+                if cfg.kind == "resnet":
+                    stride = 2 if (j == 0 and i > 0) else 1
+                    h, ns = _basic_block(bp, bs, h, stride, train=train)
+                else:
+                    h = conv2d(bp["conv"], h)
+                    h, bn = batchnorm(bp["bn"], bs["bn"], h, train=train)
+                    h = jax.nn.relu(h)
+                    ns = {"bn": bn}
+                nbs[f"b{j}"] = ns
+            if cfg.kind == "vgg":  # maxpool after each vgg stage
+                h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max,
+                                          (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+            new_stages[f"stage{i}"] = nbs
+        new_state["stages"] = new_stages
+        return h, new_state
+
+    def head(self, params: Params, h: jnp.ndarray) -> jnp.ndarray:
+        h = jnp.mean(h, axis=(1, 2))  # global average pool
+        return h @ params["fc"]["w"] + params["fc"]["b"]
+
+    def apply(self, params: Params, state: Params, x: jnp.ndarray, *,
+              train: bool = True):
+        h, state = self.stem(params, state, x, train=train)
+        h, state = self.run_stages(params, state, h, 0, len(self.cfg.stage_sizes),
+                                   train=train)
+        return self.head(params, h), state
+
+    def loss(self, params: Params, state: Params, batch: Dict, *, train: bool = True):
+        logits, new_state = self.apply(params, state, batch["x"], train=train)
+        lf = logits.astype(jnp.float32)
+        logz = jax.scipy.special.logsumexp(lf, axis=-1)
+        gold = jnp.take_along_axis(lf, batch["y"][:, None], axis=-1)[:, 0]
+        return jnp.mean(logz - gold), new_state
+
+    def stage_output_channels(self, stage: int) -> int:
+        return self.cfg.stage_channels[stage]
+
+
+def build_cnn(name: str, num_classes: int = 10) -> CNN:
+    import dataclasses
+
+    cfg = dataclasses.replace(CNN_REGISTRY[name], num_classes=num_classes)
+    return CNN(cfg)

@@ -1,0 +1,193 @@
+"""Core layer primitives: dense, norms, RoPE, activations, conv (for CNNs)."""
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# §Perf opt: bf16 matmul accumulation. jnp's default f32 accumulation makes
+# every TP row-parallel psum carry f32 activations (2x bytes); bf16 psum
+# halves the collective+memory terms at a small accuracy cost (weights stay
+# bf16 either way; the loss/norm math stays f32).
+_BF16_DOTS = os.environ.get("REPRO_BF16_DOTS", "0") == "1"
+
+from repro.models.module import PFac, Params
+
+# ---------------------------------------------------------------------------
+# Dense
+# ---------------------------------------------------------------------------
+
+
+def dense_init(fac: PFac, name: str, d_in: int, d_out: int, axes, *,
+               bias: bool = False, scale: float = 1.0) -> Params:
+    sub = fac.sub(name)
+    p = {"w": sub.param("w", (d_in, d_out), axes, init="normal", scale=scale)}
+    if bias:
+        p["b"] = sub.param("b", (d_out,), (axes[-1],), init="zeros")
+    return p
+
+
+def dense(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    w = p["w"].astype(x.dtype)
+    if _BF16_DOTS and x.dtype == jnp.bfloat16:
+        y = jax.lax.dot_general(x, w, (((x.ndim - 1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.bfloat16)
+    else:
+        y = x @ w
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms (computed in fp32, cast back)
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(fac: PFac, name: str, d: int) -> Params:
+    return {"scale": fac.sub(name).param("scale", (d,), (None,), init="ones")}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(fac: PFac, name: str, d: int) -> Params:
+    sub = fac.sub(name)
+    return {"scale": sub.param("scale", (d,), (None,), init="ones"),
+            "bias": sub.param("bias", (d,), (None,), init="zeros")}
+
+
+def layernorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_init(fac: PFac, name: str, d: int, kind: str) -> Params:
+    return layernorm_init(fac, name, d) if kind == "layernorm" else rmsnorm_init(fac, name, d)
+
+
+def norm(p: Params, x: jnp.ndarray, kind: str, eps: float = 1e-5) -> jnp.ndarray:
+    return layernorm(p, x, eps) if kind == "layernorm" else rmsnorm(p, x, eps)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies, shape [head_dim // 2]."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq] (broadcastable)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # [hd/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., seq, hd/2]
+    cos = jnp.cos(angles)[..., :, None, :]  # [..., seq, 1, hd/2]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Conv (CNN repro models + SSM causal conv1d)
+# ---------------------------------------------------------------------------
+
+
+def conv2d_init(fac: PFac, name: str, c_in: int, c_out: int, k: int, *,
+                bias: bool = True) -> Params:
+    sub = fac.sub(name)
+    p = {"w": sub.param("w", (k, k, c_in, c_out), (None, None, None, "mlp"),
+                        init="normal", fan_in=k * k * c_in, scale=1.414)}
+    if bias:
+        p["b"] = sub.param("b", (c_out,), ("mlp",), init="zeros")
+    return p
+
+
+def conv2d(p: Params, x: jnp.ndarray, stride: int = 1, padding: str = "SAME") -> jnp.ndarray:
+    y = jax.lax.conv_general_dilated(
+        x, p["w"].astype(x.dtype), (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def causal_conv1d_init(fac: PFac, name: str, channels: int, k: int) -> Params:
+    sub = fac.sub(name)
+    return {"w": sub.param("w", (k, channels), (None, "mlp"), init="normal", fan_in=k),
+            "b": sub.param("b", (channels,), ("mlp",), init="zeros")}
+
+
+def causal_conv1d(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv over time. x: [batch, seq, channels]."""
+    k = p["w"].shape[0]
+    w = p["w"].astype(x.dtype)  # [k, C]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    # depthwise: sum over taps of shifted inputs (k is tiny, unrolled)
+    y = jnp.zeros_like(x)
+    for i in range(k):
+        y = y + pad[:, i:i + x.shape[1], :] * w[i]
+    return y + p["b"].astype(x.dtype)
+
+
+def causal_conv1d_step(p: Params, x_t: jnp.ndarray, conv_state: jnp.ndarray
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single decode step. x_t: [batch, C]; conv_state: [batch, k-1, C]."""
+    w = p["w"].astype(x_t.dtype)
+    k = w.shape[0]
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # [b, k, C]
+    y = jnp.einsum("bkc,kc->bc", window, w) + p["b"].astype(x_t.dtype)
+    return y, window[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# BatchNorm (CNN repro; running stats carried in a separate state tree)
+# ---------------------------------------------------------------------------
+
+
+def batchnorm_init(fac: PFac, name: str, c: int) -> Tuple[Params, Params]:
+    sub = fac.sub(name)
+    params = {"scale": sub.param("scale", (c,), (None,), init="ones"),
+              "bias": sub.param("bias", (c,), (None,), init="zeros")}
+    state = {"mean": jnp.zeros((c,), jnp.float32),
+             "var": jnp.ones((c,), jnp.float32)}
+    return params, state
+
+
+def batchnorm(p: Params, s: Params, x: jnp.ndarray, *, train: bool,
+              momentum: float = 0.9, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if train:
+        axes = tuple(range(x.ndim - 1))
+        mean = jnp.mean(xf, axis=axes)
+        var = jnp.var(xf, axis=axes)
+        new_s = {"mean": momentum * s["mean"] + (1 - momentum) * mean,
+                 "var": momentum * s["var"] + (1 - momentum) * var}
+    else:
+        mean, var = s["mean"], s["var"]
+        new_s = s
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype), new_s

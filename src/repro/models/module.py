@@ -1,0 +1,143 @@
+"""Minimal functional module system.
+
+Models are pure functions over parameter pytrees (nested dicts of jnp arrays).
+``PFac`` is the single source of truth for parameter creation: it initializes
+the array AND records the parameter's *logical sharding axes* (a tuple of
+logical axis names, one per array dim, or None). ``dist.sharding`` later maps
+logical axes -> mesh ``PartitionSpec``s.
+
+Abstract (no-allocation) parameter trees come for free via
+``jax.eval_shape(model.init, rng)`` — the dry-run uses that to build
+ShapeDtypeStructs for a 236B model without touching memory.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+Axes = Tuple[Optional[str], ...]
+
+
+class PFac:
+    """Parameter factory with rng-folding scopes and logical-axis recording."""
+
+    def __init__(self, rng, dtype=jnp.float32, *, axes_store: Optional[dict] = None,
+                 path: Tuple[str, ...] = ()):
+        self.rng = rng
+        self.dtype = dtype
+        self.axes_store = axes_store if axes_store is not None else {}
+        self.path = path
+
+    def sub(self, name: str) -> "PFac":
+        rng = jax.random.fold_in(self.rng, _stable_hash(name))
+        return PFac(rng, self.dtype, axes_store=self.axes_store,
+                    path=self.path + (name,))
+
+    def param(self, name: str, shape: Tuple[int, ...], axes: Axes, *,
+              init: str = "normal", scale: float = 1.0, fan_in: Optional[int] = None,
+              dtype=None) -> jnp.ndarray:
+        assert len(axes) == len(shape), f"{self.path + (name,)}: axes {axes} vs shape {shape}"
+        self.axes_store[self.path + (name,)] = axes
+        dtype = dtype or self.dtype
+        rng = jax.random.fold_in(self.rng, _stable_hash(name))
+        if init == "zeros":
+            return jnp.zeros(shape, dtype)
+        if init == "ones":
+            return jnp.ones(shape, dtype)
+        if init == "normal":
+            fi = fan_in if fan_in is not None else (shape[0] if len(shape) > 1 else shape[-1])
+            std = scale / math.sqrt(max(fi, 1))
+            return (jax.random.normal(rng, shape, jnp.float32) * std).astype(dtype)
+        if init == "uniform":
+            fi = fan_in if fan_in is not None else (shape[0] if len(shape) > 1 else shape[-1])
+            lim = scale * math.sqrt(3.0 / max(fi, 1))
+            return jax.random.uniform(rng, shape, jnp.float32, -lim, lim).astype(dtype)
+        if init == "embed":
+            return (jax.random.normal(rng, shape, jnp.float32) * scale).astype(dtype)
+        raise ValueError(f"unknown init {init}")
+
+
+def _stable_hash(s: str) -> int:
+    h = 2166136261
+    for c in s.encode():
+        h = ((h ^ c) * 16777619) & 0x7FFFFFFF
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Axis-tree utilities
+# ---------------------------------------------------------------------------
+
+
+def axes_to_tree(axes_store: dict) -> dict:
+    """Nested dict mirroring the param tree, leaves = logical-axes tuples."""
+    root: dict = {}
+    for path, axes in axes_store.items():
+        node = root
+        for key in path[:-1]:
+            node = node.setdefault(key, {})
+        node[path[-1]] = axes
+    return root
+
+
+def prepend_axis(axes_tree, axis_name: Optional[str]):
+    """Prepend a leading logical axis (e.g. 'layers') to every leaf."""
+    return jax.tree.map(
+        lambda a: (axis_name,) + tuple(a),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+def init_stack(fac: PFac, n: int, layer_init: Callable[[PFac], Params],
+               stack_axis_name: Optional[str] = "layers") -> Params:
+    """Initialize ``n`` stacked copies of a layer (for lax.scan-over-layers).
+
+    The per-layer init runs under vmap so arrays get a leading [n] dim; the
+    recorded logical axes get ``stack_axis_name`` prepended.
+    """
+    inner_store: dict = {}
+
+    def one(rng):
+        f = PFac(rng, fac.dtype, axes_store=inner_store, path=())
+        return layer_init(f)
+
+    rngs = jax.random.split(fac.rng, n)
+    params = jax.vmap(one)(rngs)
+    for path, axes in inner_store.items():
+        fac.axes_store[fac.path + path] = (stack_axis_name,) + tuple(axes)
+    return params
+
+
+def slice_stack(stacked: Params, lo: int, hi: int) -> Params:
+    """Static slice [lo:hi) of every leaf's leading (layer) dim."""
+    return jax.tree.map(lambda x: x[lo:hi], stacked)
+
+
+def tree_paths(tree) -> list:
+    """Flat list of (path_tuple, leaf)."""
+    out = []
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        path = tuple(
+            k.key if isinstance(k, jax.tree_util.DictKey) else str(k) for k in kp
+        )
+        out.append((path, leaf))
+    return out
+
+
+def param_bytes(tree) -> int:
+    return sum(int(np.prod(l.shape)) * l.dtype.itemsize
+               for l in jax.tree.leaves(tree))
+
+
+def param_count(tree) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(tree))
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)

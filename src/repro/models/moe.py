@@ -1,0 +1,142 @@
+"""Mixture-of-Experts FFN.
+
+Baseline implementation is the GShard dual-einsum formulation with a capacity
+factor, *chunked over the sequence* (lax.scan) so the dispatch/combine
+one-hots stay O(chunk² · k · cf / S²) of the naive cost — with chunk=128 the
+dispatch einsums are ~3% of expert FLOPs for deepseek-v2 and negligible for
+grok-1 (napkin math in DESIGN.md §4).
+
+Sharding (logical axes):
+  "expert"    — expert dim. deepseek-v2 maps it to "model" (expert-parallel,
+                160/16 = 10 experts/chip; GSPMD inserts the all-to-alls around
+                the dispatch einsums). grok-1 leaves it unsharded and maps
+                "moe_ff" to "model" (expert tensor-parallel, 32768/16 = 2048).
+  "moe_ff"    — per-expert hidden dim.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import activation, dense, dense_init
+from repro.models.module import PFac, Params
+
+MOE_CHUNK = 128  # sequence chunk for dispatch (divides all assigned seq lens)
+
+
+def moe_init(fac: PFac, cfg: ArchConfig) -> Params:
+    """Axes convention: paths recorded relative to ``fac`` mirror the returned
+    dict exactly (caller passes ``fac.sub(<key it stores this under>)``)."""
+    d, E, ff = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    p: Params = {
+        "router": fac.param("router", (d, E), (None, "expert"), init="normal",
+                            dtype=jnp.float32),
+        "w_gate": fac.param("w_gate", (E, d, ff), ("expert", None, "moe_ff"), init="normal", fan_in=d),
+        "w_up": fac.param("w_up", (E, d, ff), ("expert", None, "moe_ff"), init="normal", fan_in=d),
+        "w_down": fac.param("w_down", (E, ff, d), ("expert", "moe_ff", None), init="normal", fan_in=ff),
+    }
+    if cfg.num_shared_experts > 0:
+        sff = cfg.num_shared_experts * ff
+        p["shared_gate"] = dense_init(fac, "shared_gate", d, sff, (None, "mlp"))
+        p["shared_up"] = dense_init(fac, "shared_up", d, sff, (None, "mlp"))
+        p["shared_down"] = dense_init(fac, "shared_down", sff, d, ("mlp", None))
+    return p
+
+
+def _capacity(chunk_tokens: int, cfg: ArchConfig) -> int:
+    c = int(chunk_tokens * cfg.experts_per_token * cfg.capacity_factor / cfg.num_experts)
+    return max(c, 1)
+
+
+def _dispatch_combine(x: jnp.ndarray, p: Params, cfg: ArchConfig
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """GShard top-k dispatch for one chunk. x: [B, Sc, d].
+
+    Returns (dispatch [B,Sc,E,C] bf16 one-hot, combine [B,Sc,E,C], aux_loss).
+    """
+    B, Sc, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    C = _capacity(Sc, cfg)
+    logits = (x.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # [B,Sc,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, k)  # [B,Sc,k]
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)  # [B,Sc,k,E]
+    # position of each (token, choice) within its expert queue: cumulate over
+    # the flattened (Sc*k) token-choice order (earlier tokens win capacity)
+    flat = onehot.reshape(B, Sc * k, E)
+    pos = jnp.cumsum(flat, axis=1) - flat  # slots used before this choice
+    pos = pos.reshape(B, Sc, k, E)
+    within = (pos < C)
+    keep = onehot * within.astype(jnp.float32)
+    slot = jax.nn.one_hot(jnp.sum(pos * onehot, axis=-1).astype(jnp.int32), C,
+                          dtype=jnp.float32)  # [B,Sc,k,C]
+    # dispatch[b,s,e,c] = 1 if choice routed to expert e slot c
+    disp = jnp.einsum("bske,bskc->bsec", keep, slot)
+    comb = jnp.einsum("bske,bskc,bsk->bsec", keep, slot, gate_vals)
+    # expert-level load-balancing aux loss (Switch-style)
+    me = jnp.mean(probs, axis=(0, 1))  # mean router prob per expert
+    ce = jnp.mean(onehot.sum(2), axis=(0, 1))  # fraction routed per expert
+    aux = jnp.sum(me * ce) * (E / k)
+    return disp.astype(x.dtype), comb.astype(x.dtype), aux
+
+
+def _expert_ffn(p: Params, xin: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """xin: [B, E, C, d] -> [B, E, C, d]; batched over experts."""
+    act = activation(cfg.mlp_activation)
+    g = jnp.einsum("becd,edf->becf", xin, p["w_gate"].astype(xin.dtype))
+    u = jnp.einsum("becd,edf->becf", xin, p["w_up"].astype(xin.dtype))
+    h = act(g) * u
+    return jnp.einsum("becf,efd->becd", h, p["w_down"].astype(xin.dtype))
+
+
+def moe_forward(p: Params, x: jnp.ndarray, cfg: ArchConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """MoE FFN. x: [B, S, d] -> ([B, S, d], aux_loss scalar)."""
+    B, S, d = x.shape
+    chunk = min(MOE_CHUNK, S)
+    assert S % chunk == 0, f"seq {S} not divisible by moe chunk {chunk}"
+    n = S // chunk
+
+    def body(carry, xc):  # xc: [B, chunk, d]
+        disp, comb, aux = _dispatch_combine(xc, p, cfg)
+        xin = jnp.einsum("bsec,bsd->becd", disp, xc)
+        out = _expert_ffn(p, xin, cfg)
+        yc = jnp.einsum("becd,bsec->bsd", out, comb)
+        return carry + aux, yc
+
+    xs = x.reshape(B, n, chunk, d).transpose(1, 0, 2, 3)  # [n, B, chunk, d]
+    aux_total, ys = jax.lax.scan(body, jnp.float32(0.0), xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, d)
+
+    if cfg.num_shared_experts > 0:
+        act = activation(cfg.mlp_activation)
+        shared = dense(p["shared_down"],
+                       act(dense(p["shared_gate"], x)) * dense(p["shared_up"], x))
+        y = y + shared
+    return y, aux_total / n
+
+
+def moe_decode(p: Params, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """Decode-path MoE for a single token per sequence. x: [B, 1, d].
+
+    Reuses the capacity-based GShard dispatch with the *batch* as the token
+    group (one token/seq): expert compute stays proportional to B·k slots.
+    Capacity factor is doubled at decode to make token drops negligible.
+    """
+    import dataclasses
+
+    B, _, d = x.shape
+    dcfg = dataclasses.replace(cfg, capacity_factor=cfg.capacity_factor * 2)
+    xt = x.reshape(1, B, d)  # [1, B(tokens), d]
+    disp, comb, _ = _dispatch_combine(xt, p, dcfg)
+    xin = jnp.einsum("bsec,bsd->becd", disp, xt)
+    out = _expert_ffn(p, xin, cfg)
+    y = jnp.einsum("becd,bsec->bsd", out, comb).reshape(B, 1, d)
+    if cfg.num_shared_experts > 0:
+        act = activation(cfg.mlp_activation)
+        shared = dense(p["shared_down"],
+                       act(dense(p["shared_gate"], x)) * dense(p["shared_up"], x))
+        y = y + shared
+    return y

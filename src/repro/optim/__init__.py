@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (Optimizer, sgd, momentum, adamw,
+                                    apply_updates, global_norm, clip_by_global_norm)
+from repro.optim.schedules import constant, cosine, warmup_cosine

@@ -1,0 +1,100 @@
+"""Optimizers as pure pytree transformations (no optax available offline).
+
+Each ``Optimizer`` is (init, update): ``update(grads, state, params)`` returns
+(updates, new_state) where updates are ADDED to params. AdamW keeps fp32
+m/v (and applies updates in fp32 before casting back), so bf16 params train
+stably. Frozen blocks simply never enter the optimizer — that absence IS the
+paper's M_optimizer saving; no masking machinery is needed because SmartFreeze
+splits the param tree itself (core/freezing.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Union[float, Callable[[jnp.ndarray], jnp.ndarray]]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]
+
+
+def _lr(schedule: Schedule, step):
+    return schedule(step) if callable(schedule) else schedule
+
+
+def sgd(lr: Schedule) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = _lr(lr, step)
+        ups = jax.tree.map(lambda g: (-lr_t * g.astype(jnp.float32)), grads)
+        return ups, {"step": step}
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: Schedule, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        mu = jax.tree.map(lambda m, g: beta * m + g.astype(jnp.float32),
+                          state["mu"], grads)
+        lr_t = _lr(lr, step)
+        ups = jax.tree.map(lambda m: -lr_t * m, mu)
+        return ups, {"step": step, "mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: Schedule, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(z, params),
+                "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+        lr_t = _lr(lr, step)
+
+        def upd(m_, v_, p):
+            u = -lr_t * ((m_ / c1) / (jnp.sqrt(v_ / c2) + eps)
+                         + weight_decay * p.astype(jnp.float32))
+            return u
+
+        ups = jax.tree.map(upd, m, v, params)
+        return ups, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+                        params, updates)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm

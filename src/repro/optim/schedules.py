@@ -1,0 +1,27 @@
+"""Learning-rate schedules (step -> lr, jit-safe)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def cosine(lr: float, total_steps: int, final_frac: float = 0.1):
+    def f(step):
+        t = jnp.minimum(step.astype(jnp.float32) / total_steps, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.float32(lr) * (final_frac + (1 - final_frac) * cos)
+    return f
+
+
+def warmup_cosine(lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(warmup_steps, 1)
+        t = jnp.clip((s - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0, 1)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.float32(lr) * jnp.where(s < warmup_steps, warm, cos)
+    return f

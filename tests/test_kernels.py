@@ -1,0 +1,139 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (hypothesis) in
+interpret mode (CPU executes the kernel bodies in Python)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.block_perturb import diff_sqnorm, tree_diff_sqnorm
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.ssm_scan import ssd_scan
+
+RNG = np.random.RandomState(0)
+
+
+def _rand(shape, dtype):
+    x = RNG.randn(*shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    B=st.sampled_from([1, 2]),
+    S=st.sampled_from([64, 128, 256]),
+    heads=st.sampled_from([(2, 1), (4, 2), (4, 4)]),
+    d=st.sampled_from([16, 32]),
+    causal=st.booleans(),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_flash_attention_sweep(B, S, heads, d, causal, dtype):
+    Hq, Hkv = heads
+    q = _rand((B, S, Hq, d), dtype)
+    k = _rand((B, S, Hkv, d), dtype)
+    v = _rand((B, S, Hkv, d), dtype)
+    out = flash_attention_fwd(q, k, v, causal=causal, block_q=64, block_k=32,
+                              interpret=True)
+    expected = ref.flash_attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expected, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_block_shapes():
+    q = _rand((1, 256, 2, 32), jnp.float32)
+    k = _rand((1, 256, 2, 32), jnp.float32)
+    v = _rand((1, 256, 2, 32), jnp.float32)
+    base = ref.flash_attention_ref(q, k, v, causal=True)
+    for bq, bk in [(32, 32), (64, 128), (256, 64), (128, 256)]:
+        out = flash_attention_fwd(q, k, v, causal=True, block_q=bq, block_k=bk,
+                                  interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                                   rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    B=st.sampled_from([1, 3]),
+    S=st.sampled_from([128, 512]),
+    heads=st.sampled_from([(2, 1), (4, 2)]),
+    d=st.sampled_from([16, 64]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    frac=st.sampled_from([0.25, 0.9, 1.0]),
+)
+def test_decode_attention_sweep(B, S, heads, d, dtype, frac):
+    Hq, Hkv = heads
+    q = _rand((B, Hq, d), dtype)
+    k = _rand((B, S, Hkv, d), dtype)
+    v = _rand((B, S, Hkv, d), dtype)
+    length = jnp.asarray([max(1, int(S * frac))] * B, jnp.int32)
+    out = decode_attention(q, k, v, length, block_k=64, interpret=True)
+    expected = ref.decode_attention_ref(q, k, v, length)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expected, np.float32),
+                               rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# ssd scan
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    B=st.sampled_from([1, 2]),
+    S=st.sampled_from([64, 256]),
+    H=st.sampled_from([1, 3]),
+    hd=st.sampled_from([8, 16]),
+    N=st.sampled_from([4, 16]),
+    chunk=st.sampled_from([32, 64]),
+)
+def test_ssd_scan_sweep(B, S, H, hd, N, chunk):
+    x = _rand((B, S, H, hd), jnp.float32)
+    dt = jnp.abs(_rand((B, S, H), jnp.float32)) * 0.3
+    la = -jnp.abs(_rand((B, S, H), jnp.float32)) * 0.2
+    Bm = _rand((B, S, N), jnp.float32)
+    Cm = _rand((B, S, N), jnp.float32)
+    y = ssd_scan(x, dt, la, Bm, Cm, chunk=chunk, interpret=True)
+    expected = ref.ssd_scan_ref(x, dt, la, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(expected),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# block perturbation reduction
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(3, 100000),
+       dtype=st.sampled_from([jnp.float32, jnp.bfloat16]))
+def test_diff_sqnorm_sweep(n, dtype):
+    a = _rand((n,), dtype)
+    b = _rand((n,), dtype)
+    got = float(diff_sqnorm(a, b, block=4096, interpret=True))
+    want = float(ref.diff_sqnorm_ref(a, b))
+    assert abs(got - want) <= 1e-4 * max(abs(want), 1.0)
+
+
+def test_tree_diff_sqnorm():
+    t1 = {"a": _rand((37, 5), jnp.float32), "b": {"c": _rand((11,), jnp.float32)}}
+    t2 = jax.tree.map(lambda x: x + 0.5, t1)
+    got = float(tree_diff_sqnorm(t1, t2, interpret=True))
+    want = sum(float(ref.diff_sqnorm_ref(x, y)) for x, y in
+               zip(jax.tree.leaves(t1), jax.tree.leaves(t2)))
+    assert abs(got - want) < 1e-3

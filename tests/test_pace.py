@@ -1,0 +1,75 @@
+"""Pace controller: Eq. 2 telescoping correctness + freeze behaviour."""
+import numpy as np
+import pytest
+
+from repro.core.pace import PaceController
+
+
+def _feed(ctrl, params_seq):
+    out = []
+    for p in params_seq:
+        out.append(ctrl.observe({"w": p}))
+    return out
+
+
+def test_perturbation_matches_eq2_directly():
+    """P = ||sum_q U|| / sum_q ||U|| with U the per-round updates."""
+    rng = np.random.RandomState(0)
+    Q = 4
+    ctrl = PaceController(window_q=Q, min_rounds=1)
+    thetas = [rng.randn(50).astype(np.float32)]
+    for _ in range(10):
+        thetas.append(thetas[-1] + rng.randn(50).astype(np.float32) * 0.1)
+    _feed(ctrl, thetas)
+    # direct Eq. 2 at the last round
+    updates = [thetas[i + 1] - thetas[i] for i in range(len(thetas) - 1)]
+    last_q = updates[-Q:]
+    num = np.linalg.norm(np.sum(last_q, axis=0))
+    den = sum(np.linalg.norm(u) for u in last_q)
+    expect = num / den
+    got = ctrl._perturbations[-1]
+    np.testing.assert_allclose(got, expect, rtol=1e-5)
+
+
+def test_converged_sequence_freezes():
+    rng = np.random.RandomState(1)
+    ctrl = PaceController(window_q=3, smooth_h=3, mu=2, min_rounds=5,
+                          slope_lambda=5e-2)
+    theta = rng.randn(100).astype(np.float32)
+    frozen_at = None
+    for r in range(60):
+        scale = 0.5 / (1 + r)  # decaying, oscillating updates -> converging
+        theta = theta + scale * rng.randn(100).astype(np.float32)
+        ctrl.observe({"w": theta})
+        if ctrl.should_freeze():
+            frozen_at = r
+            break
+    assert frozen_at is not None, ctrl.history
+
+
+def test_diverging_sequence_does_not_freeze_early():
+    rng = np.random.RandomState(2)
+    ctrl = PaceController(window_q=3, smooth_h=3, mu=3, min_rounds=5,
+                          slope_lambda=1e-4)
+    theta = np.zeros(100, np.float32)
+    for r in range(15):
+        theta = theta + 1.0 + rng.randn(100).astype(np.float32) * 0.01
+        ctrl.observe({"w": theta})
+        # steady drift in one direction: perturbation stays ~1 with slope ~0
+        # but the rounds guard + tight lambda keep it honest; the real guard
+        # is that perturbation stays HIGH:
+    assert ctrl._smoothed[-1] > 0.9  # consistent updates -> no convergence
+
+
+def test_min_rounds_guard():
+    ctrl = PaceController(min_rounds=10)
+    for _ in range(3):
+        ctrl.observe({"w": np.zeros(10, np.float32)})
+    assert not ctrl.should_freeze()
+
+
+def test_schedules():
+    from repro.core.pace import front_loaded_schedule, naive_equal_schedule
+
+    assert sum(front_loaded_schedule(100, 4)) == 100
+    assert len(naive_equal_schedule(100, 4)) == 4
