@@ -11,7 +11,13 @@ communities) are what reproduce the paper's tables.
   fig9_rlcd                RL-CD community quality + convergence (Fig. 9)
   speedup_time_model       stage FLOPs speedup (paper: up to 2.02x)
   kernels_microbench       Pallas kernels (interpret) vs jnp oracle timing
+  round_engine             fused+cached round engine vs seed sequential path
+                           (us/round per stage; emits BENCH_round_engine.json)
+
+Run everything: ``python benchmarks/run.py``; or name a subset:
+``python benchmarks/run.py round_engine fig10_memory``.
 """
+import json
 import sys, os, time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -110,8 +116,11 @@ def tab1_fl_accuracy(rounds=12):
     results = {}
     model = CNN(cfg)
     params, state = model.init(jax.random.PRNGKey(0))
+    # accuracy-TREND benchmark: run the sequential path (fused=False) — it
+    # skips the fused engine's per-cohort-shape compiles, which dominate at
+    # this tiny scale; round_engine is the perf benchmark for the fused path
     srv = SmartFreezeServer(model, clients, clients_per_round=5, batch_size=32,
-                            rounds_per_stage=rounds // 2,
+                            rounds_per_stage=rounds // 2, fused=False,
                             pace_kwargs=dict(min_rounds=3, mu=2,
                                              slope_lambda=3e-2))
     out = srv.run(params, state)
@@ -124,7 +133,7 @@ def tab1_fl_accuracy(rounds=12):
                      ("tifl", B.run_tifl),
                      ("depthfl", B.run_depthfl)]:
         out = fn(cfg, clients, rounds=rounds, batch_size=32,
-                 clients_per_round=5)
+                 clients_per_round=5, fused=False)
         if out.get("inoperative"):
             results[name] = "NA(inoperative)"
         else:
@@ -186,6 +195,7 @@ def tab2_pace_ablation(rounds=16):
         params, state = model.init(jax.random.PRNGKey(0))
         srv = SmartFreezeServer(model, clients, clients_per_round=5,
                                 batch_size=32, rounds_per_stage=rounds // 2,
+                                fused=False,  # trend bench: skip fused compiles
                                 pace_kwargs=pace or dict(min_rounds=999))
         out = srv.run(params, state, schedule=sched, total_rounds=rounds)
         res[name] = round(eval_fn(model, out["params"], out["state"]), 3)
@@ -264,15 +274,138 @@ def kernels_microbench():
          f";note=interpret-mode correctness (perf target is TPU)")
 
 
+def round_engine(rounds=4):
+    """Fused+cached round engine vs the seed's sequential/recompute path.
+
+    Times one simulated federated round per stage in both modes (after a
+    compile warmup round), checks cached-vs-recompute logits equivalence on
+    BOTH freezing backends, and writes BENCH_round_engine.json so the perf
+    trajectory is tracked from this PR on."""
+    import jax, jax.numpy as jnp
+    from repro import configs
+    from repro.core import freezing
+    from repro.core import freezing_cnn as fz
+    from repro.data.partition import iid_partition
+    from repro.data.synthetic import SyntheticVision, make_lm_batch
+    from repro.fl.client import make_client_fleet
+    from repro.fl.engine import RoundEngine
+    from repro.models.cnn import CNN, CNNConfig
+    from repro.models.transformer import build
+    from repro.optim import sgd
+
+    sv = SyntheticVision(num_classes=8, image_size=16)
+    train = sv.sample(576, seed=1)
+    parts = iid_partition(train["y"], 6, seed=0)
+    clients = make_client_fleet(train, parts, scenario="low", seed=0)
+    by_id = {c.client_id: c for c in clients}
+    sel = [c.client_id for c in clients]
+    # 4-stage ResNet: the final stage's frozen prefix is 3/4 of the network —
+    # the regime progressive training spends most wall-clock in (paper §IV)
+    cfg = CNNConfig("rn", "resnet", stage_sizes=(1, 1, 1, 1),
+                    stage_channels=(8, 16, 32, 64), num_classes=8)
+    model = CNN(cfg)
+    params, state = model.init(jax.random.PRNGKey(0))
+    n_stages = len(cfg.stage_sizes)
+    bs = 16
+
+    def make_engine(stage, frozen, fused):
+        cached_loss = feature_fn = None
+        if stage > 0:
+            cached_loss = fz.cnn_cached_stage_loss_fn(model, stage)
+            feature_fn = lambda x: fz.cnn_prefix_features(model, frozen, state,
+                                                          x, stage)
+        return RoundEngine(loss_fn=fz.cnn_stage_loss_fn(model, stage),
+                           optimizer=sgd(0.05), frozen=frozen,
+                           cached_loss_fn=cached_loss, feature_fn=feature_fn,
+                           batch_size=bs, local_epochs=1, fused=fused)
+
+    per_stage = []
+    for stage in range(n_stages):
+        frozen, active = fz.init_cnn_stage_active(model, params, stage,
+                                                  jax.random.PRNGKey(1))
+        row = {"stage": stage}
+        for mode, fused in (("seed_sequential", False), ("fused_cached", True)):
+            engine = make_engine(stage, frozen, fused)
+            cache = {cid: True for cid in sel} if (fused and stage > 0) else {}
+            a, st = active, state  # both modes start from the stage-start state
+            a, st, _ = engine.run_round(by_id, sel, a, st, 0,
+                                        use_cache=cache)  # warmup
+            t0 = time.time()
+            for r in range(1, rounds + 1):
+                a, st, _ = engine.run_round(by_id, sel, a, st, r,
+                                            use_cache=cache)
+            jax.tree.leaves(a)[0].block_until_ready()
+            row[f"{mode}_us"] = (time.time() - t0) / rounds * 1e6
+        row["speedup"] = row["seed_sequential_us"] / row["fused_cached_us"]
+        per_stage.append(row)
+        # model growth: later stages' frozen prefixes use the trained weights
+        # and BN running stats (what SmartFreezeServer itself threads forward)
+        params = fz.merge_cnn_params(model, params, stage, a)
+        state = st
+
+    # cached vs recompute logits equivalence (fp32), CNN backend
+    frozen, active = fz.init_cnn_stage_active(model, params, n_stages - 1,
+                                              jax.random.PRNGKey(1))
+    x = jnp.asarray(train["x"][:32])
+    feats = fz.cnn_prefix_features(model, frozen, state, x, n_stages - 1)
+    l_cached, _ = fz.cnn_stage_forward_from_features(model, active, state,
+                                                     feats, n_stages - 1)
+    l_full, _ = fz.cnn_stage_forward(model, frozen, active, state, x,
+                                     n_stages - 1)
+    cnn_err = float(np.abs(np.asarray(l_cached, np.float32)
+                           - np.asarray(l_full, np.float32)).max())
+    cnn_ok = bool(np.allclose(np.asarray(l_cached, np.float32),
+                              np.asarray(l_full, np.float32),
+                              rtol=1e-5, atol=1e-5))
+
+    # ... and LM backend (reduced llama, final stage)
+    lcfg = configs.get("llama3-8b").reduced(num_layers=4, num_freeze_blocks=2)
+    lm = build(lcfg)
+    lparams = lm.init(jax.random.PRNGKey(0))
+    plan = freezing.make_stage_plan(lcfg, 1)
+    lfrozen, lactive = freezing.init_stage_active(lm, lparams, plan,
+                                                  jax.random.PRNGKey(1))
+    batch = {k: jnp.asarray(v) for k, v in make_lm_batch(lcfg, 2, 32).items()}
+    h0, aux0 = freezing.stage_prefix_features(lm, lfrozen, lactive, batch, plan)
+    hc, wc, _ = freezing.stage_forward_from_features(lm, lactive, h0, aux0,
+                                                     plan, remat=False)
+    hf, wf, _ = freezing.stage_forward(lm, lfrozen, lactive, batch, plan,
+                                       remat=False)
+    lm_lc = np.asarray(hc @ wc.astype(hc.dtype), np.float32)
+    lm_lf = np.asarray(hf @ wf.astype(hf.dtype), np.float32)
+    lm_err = float(np.abs(lm_lc - lm_lf).max())
+    lm_ok = bool(np.allclose(lm_lc, lm_lf, rtol=2e-2, atol=2e-2))  # bf16
+
+    out = {"rounds_timed": rounds, "clients": len(sel),
+           "per_stage": per_stage,
+           "cnn_logits_allclose": cnn_ok, "cnn_logits_max_err": cnn_err,
+           "lm_logits_allclose": lm_ok, "lm_logits_max_err": lm_err}
+    path = os.path.join(os.path.dirname(__file__), "BENCH_round_engine.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    final = per_stage[-1]
+    _row("round_engine", final["fused_cached_us"],
+         ";".join(f"stage{r['stage']}:seq={r['seed_sequential_us']:.0f}us;"
+                  f"fused={r['fused_cached_us']:.0f}us;"
+                  f"speedup={r['speedup']:.2f}x" for r in per_stage)
+         + f";cnn_allclose={cnn_ok};lm_allclose={lm_ok}")
+
+
+BENCHES = {}
+
+
 def main() -> None:
+    BENCHES.update({f.__name__: f for f in (
+        fig10_memory, speedup_time_model, fig9_rlcd, fig2_layer_convergence,
+        kernels_microbench, round_engine, tab2_pace_ablation, tab1_fl_accuracy)})
+    names = sys.argv[1:] or list(BENCHES)
+    unknown = [n for n in names if n not in BENCHES]
+    if unknown:
+        raise SystemExit(f"unknown benchmark(s) {unknown}; "
+                         f"choose from {list(BENCHES)}")
     print("name,us_per_call,derived")
-    fig10_memory()
-    speedup_time_model()
-    fig9_rlcd()
-    fig2_layer_convergence()
-    kernels_microbench()
-    tab2_pace_ablation()
-    tab1_fl_accuracy()
+    for n in names:
+        BENCHES[n]()
 
 
 if __name__ == "__main__":

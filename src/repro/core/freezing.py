@@ -174,32 +174,65 @@ def _run(model: LM, h, run_params, kind: str, cfg: ArchConfig, *, remat: bool,
     return h, aux
 
 
-def stage_forward(model: LM, frozen: Params, active: Params, batch: Dict,
-                  plan: StagePlan, *, remat: bool = True, remat_policy=None):
-    """Returns (hidden, head_w, aux_loss) — the head matmul is folded into the
-    chunked CE loss so [B, S, V] logits are never materialized."""
+def prefix_is_static(plan: StagePlan) -> bool:
+    """True when the frozen prefix is a fixed feature extractor for the whole
+    stage — i.e. its outputs can be cached. False at stage 0 (the embedding
+    trains, so 'prefix' outputs move every step) and when the prefix contains
+    a weight-tied shared-attention segment (zamba2): those weights live in
+    the ACTIVE tree at every stage and keep updating."""
+    if plan.train_embed:
+        return False
+    return not any(kind == "shared_attn"
+                   for region, kind, si, a, b in plan.runs
+                   if region == "frozen")
+
+
+def stage_prefix_features(model: LM, frozen: Params, active: Params,
+                          batch: Dict, plan: StagePlan):
+    """Embed + frozen-prefix forward only. Returns (hidden, aux_loss_so_far).
+
+    The plan's runs list all frozen runs before any active run (the frozen
+    region is layers [0, lo) and the active region [lo, hi)), so the prefix
+    is a clean split point. When ``prefix_is_static(plan)`` the result is a
+    pure function of the batch and can be cached across the stage's rounds
+    — the round engine (fl/engine.py) exploits exactly that."""
     from repro.dist.sharding import shard_batch
 
     cfg = model.cfg
     src = active if plan.train_embed else frozen
     h = shard_batch(model.embed(src, batch), batch_axes=cfg.batch_axes)
     aux_total = jnp.float32(0.0)
-    crossed = False
     for ri, (region, kind, si, a, b) in enumerate(plan.runs):
-        if region == "active" and not crossed:
-            h = jax.lax.stop_gradient(h)  # memory boundary: no bwd into prefix
-            crossed = True
+        if region == "active":
+            break
         if kind == "shared_attn":
             sp = active["shared_attn"][str(_shared_idx(model, si))]
             h, aux = layer_apply(sp, h, cfg, kind, causal=not cfg.is_encoder_only)
         else:
-            tree = active if region == "active" else frozen
-            h, aux = _run(model, h, tree["runs"][str(ri)], kind, cfg,
-                          remat=remat and region == "active",
-                          remat_policy=remat_policy)
+            h, aux = _run(model, h, frozen["runs"][str(ri)], kind, cfg,
+                          remat=False)
         aux_total = aux_total + aux
-    if not crossed:
-        h = jax.lax.stop_gradient(h)
+    return h, aux_total
+
+
+def stage_forward_from_features(model: LM, active: Params, h, aux_total,
+                                plan: StagePlan, *, remat: bool = True,
+                                remat_policy=None):
+    """Active-suffix forward from (possibly cached) prefix features. Applies
+    the stop-gradient memory boundary, the active runs, and the final-norm
+    head or output module. Returns (hidden, head_w, aux_loss)."""
+    cfg = model.cfg
+    h = jax.lax.stop_gradient(h)  # memory boundary: no bwd into prefix
+    for ri, (region, kind, si, a, b) in enumerate(plan.runs):
+        if region != "active":
+            continue
+        if kind == "shared_attn":
+            sp = active["shared_attn"][str(_shared_idx(model, si))]
+            h, aux = layer_apply(sp, h, cfg, kind, causal=not cfg.is_encoder_only)
+        else:
+            h, aux = _run(model, h, active["runs"][str(ri)], kind, cfg,
+                          remat=remat, remat_policy=remat_policy)
+        aux_total = aux_total + aux
     if plan.final:
         from repro.models.layers import norm
         h = norm(active["final_norm"], h, cfg.norm, cfg.norm_eps)
@@ -209,6 +242,17 @@ def stage_forward(model: LM, frozen: Params, active: Params, batch: Dict,
         h = op_mod.lm_op_hidden(active["op"], h, cfg)
         head_w = active["op"]["head"]["w"]
     return h, head_w, aux_total
+
+
+def stage_forward(model: LM, frozen: Params, active: Params, batch: Dict,
+                  plan: StagePlan, *, remat: bool = True, remat_policy=None):
+    """Returns (hidden, head_w, aux_loss) — the head matmul is folded into the
+    chunked CE loss so [B, S, V] logits are never materialized. Composes
+    ``stage_prefix_features`` + ``stage_forward_from_features`` so the cached
+    path is numerically identical to full recompute by construction."""
+    h, aux = stage_prefix_features(model, frozen, active, batch, plan)
+    return stage_forward_from_features(model, active, h, aux, plan,
+                                       remat=remat, remat_policy=remat_policy)
 
 
 def _shared_idx(model: LM, seg_idx: int) -> int:
@@ -234,6 +278,20 @@ def stage_loss_fn(model: LM, plan: StagePlan, *, remat: bool = True,
     def loss_fn(active: Params, frozen: Params, batch: Dict) -> jnp.ndarray:
         h, head_w, aux = stage_forward(model, frozen, active, batch, plan,
                                        remat=remat, remat_policy=remat_policy)
+        return chunked_ce_loss(h, head_w, batch, model.cfg) + 0.01 * aux
+
+    return loss_fn
+
+
+def cached_stage_loss_fn(model: LM, plan: StagePlan, *, remat: bool = True,
+                         remat_policy=None):
+    """Stage loss over cached prefix features: the batch carries ``h0`` (the
+    prefix output) and ``aux0`` (the prefix's frozen aux loss, a constant)
+    alongside the usual label/mask keys; no frozen tree is consumed."""
+    def loss_fn(active: Params, batch: Dict) -> jnp.ndarray:
+        h, head_w, aux = stage_forward_from_features(
+            model, active, batch["h0"], batch["aux0"], plan, remat=remat,
+            remat_policy=remat_policy)
         return chunked_ce_loss(h, head_w, batch, model.cfg) + 0.01 * aux
 
     return loss_fn

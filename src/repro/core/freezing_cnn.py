@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import output_module as op_mod
-from repro.models.cnn import CNN
+from repro.models.cnn import CNN, softmax_xent
 from repro.models.module import PFac, Params
 from repro.optim import Optimizer, apply_updates, clip_by_global_norm
 
@@ -58,33 +58,39 @@ def init_cnn_stage_active(model: CNN, params: Params, stage: int, rng, *,
     return frozen, active
 
 
-def cnn_stage_forward(model: CNN, frozen: Params, active: Params,
-                      bn_state: Params, x: jnp.ndarray, stage: int, *,
-                      op_kind: str = "conv", train: bool = True):
+def cnn_prefix_features(model: CNN, frozen: Params, bn_state: Params,
+                        x: jnp.ndarray, stage: int) -> jnp.ndarray:
+    """Forward of the frozen prefix only (stem + stages [0, stage)), eval
+    mode, stop-gradient boundary. Within a stage the prefix params AND its
+    BN running stats are fixed, so this is a pure function of ``x`` — the
+    round engine computes it once per (client, stage) and caches the result
+    as a fixed feature extractor (NeuLite/ProFL-style). Stage 0 has no
+    frozen prefix: the identity is returned."""
+    if stage == 0:
+        return x
+    h = x
+    if model.cfg.kind == "resnet":
+        h, _ = model.stem(frozen, bn_state, h, train=False)
+    h, _ = model.run_stages(frozen, bn_state, h, 0, stage, train=False)
+    return jax.lax.stop_gradient(h)
+
+
+def cnn_stage_forward_from_features(model: CNN, active: Params,
+                                    bn_state: Params, h: jnp.ndarray,
+                                    stage: int, *, op_kind: str = "conv",
+                                    train: bool = True):
+    """Active-suffix forward: consumes frozen-prefix features (or raw images
+    at stage 0) and runs active stage (+stem at stage 0) and the head/output
+    module. ``cnn_stage_forward`` composes prefix+suffix, so cached-feature
+    training is numerically identical to full recompute by construction."""
     cfg = model.cfg
     n_stages = len(cfg.stage_sizes)
-    merged: Params = {}
-    if "stem" in active:
-        merged["stem"] = active["stem"]
-    elif "stem" in frozen:
-        merged["stem"] = frozen["stem"]
-    merged["stages"] = {**frozen["stages"], **active["stages"]}
-    if "fc" in active:
-        merged["fc"] = active["fc"]
-    # stem
-    if cfg.kind == "resnet":
-        h, bn_state = model.stem(merged, bn_state, x, train=train and stage == 0)
-    else:
-        h = x
-    # frozen prefix: eval mode, stop_gradient boundary
-    if stage > 0:
-        h, _ = model.run_stages(merged, bn_state, h, 0, stage, train=False)
-        h = jax.lax.stop_gradient(h)
-    # active stage
-    h, bn_state = model.run_stages(merged, bn_state, h, stage, stage + 1,
+    if stage == 0 and cfg.kind == "resnet":
+        h, bn_state = model.stem(active, bn_state, h, train=train)
+    h, bn_state = model.run_stages(active, bn_state, h, stage, stage + 1,
                                    train=train)
     if stage == n_stages - 1:
-        logits = model.head(merged, h)
+        logits = model.head(active, h)
     elif op_kind == "fc_only":
         logits = op_mod.cnn_fc_only_apply(active["op"], h)
     else:
@@ -92,14 +98,30 @@ def cnn_stage_forward(model: CNN, frozen: Params, active: Params,
     return logits, bn_state
 
 
+def cnn_stage_forward(model: CNN, frozen: Params, active: Params,
+                      bn_state: Params, x: jnp.ndarray, stage: int, *,
+                      op_kind: str = "conv", train: bool = True):
+    h = cnn_prefix_features(model, frozen, bn_state, x, stage)
+    return cnn_stage_forward_from_features(model, active, bn_state, h, stage,
+                                           op_kind=op_kind, train=train)
+
+
 def cnn_stage_loss_fn(model: CNN, stage: int, *, op_kind: str = "conv"):
     def loss_fn(active, frozen, bn_state, batch):
         logits, new_state = cnn_stage_forward(model, frozen, active, bn_state,
                                               batch["x"], stage, op_kind=op_kind)
-        lf = logits.astype(jnp.float32)
-        logz = jax.scipy.special.logsumexp(lf, axis=-1)
-        gold = jnp.take_along_axis(lf, batch["y"][:, None], axis=-1)[:, 0]
-        return jnp.mean(logz - gold), new_state
+        return softmax_xent(logits, batch["y"]), new_state
+
+    return loss_fn
+
+
+def cnn_cached_stage_loss_fn(model: CNN, stage: int, *, op_kind: str = "conv"):
+    """Stage loss over pre-extracted frozen-prefix features: ``batch["x"]``
+    holds cached activations instead of images; the frozen tree is unused."""
+    def loss_fn(active, frozen, bn_state, batch):
+        logits, new_state = cnn_stage_forward_from_features(
+            model, active, bn_state, batch["x"], stage, op_kind=op_kind)
+        return softmax_xent(logits, batch["y"]), new_state
 
     return loss_fn
 

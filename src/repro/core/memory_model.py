@@ -119,13 +119,26 @@ def layer_activation_bytes(cfg, batch: int, seq: int, kind: str) -> int:
     raise ValueError(kind)
 
 
+def feature_cache_bytes(cfg, num_tokens: int) -> float:
+    """Bytes to hold cached frozen-prefix activations for ``num_tokens``
+    tokens of a client shard (the [*, d_model] hidden at the stage's
+    stop-gradient boundary, in compute dtype)."""
+    return float(num_tokens) * cfg.d_model * BYTES[cfg.compute_dtype]
+
+
 def stage_memory_bytes(cfg, stage: int, batch: int, seq: int, *,
                        optimizer: str = "adamw",
-                       op_module_layers: Optional[int] = None) -> Dict[str, float]:
+                       op_module_layers: Optional[int] = None,
+                       cache_tokens: int = 0) -> Dict[str, float]:
     """Eq. (4) for SmartFreeze stage ``stage`` (0-based). Returns the terms.
 
     Vanilla full-model training is ``stage=None``-like via stage=T-1 plus
     counting all blocks active — use ``full_model_memory_bytes`` for that.
+
+    ``cache_tokens``: frozen-prefix feature-cache hook (fl/engine.py). When a
+    client additionally holds its shard's prefix activations, the requirement
+    grows by ``feature_cache_bytes`` — the selector uses this to decline the
+    cache on memory-poor clients.
     """
     bounds = cfg.block_boundaries()
     lo, hi = bounds[stage], bounds[stage + 1]
@@ -157,9 +170,11 @@ def stage_memory_bytes(cfg, stage: int, batch: int, seq: int, *,
     # transient: the largest single-layer activation in the forward
     max_layer = max(layer_activation_bytes(cfg, batch, seq, kinds[i])
                     for i in range(0, hi))
+    cache_b = feature_cache_bytes(cfg, cache_tokens) if cache_tokens else 0.0
     return {"params": params_bytes, "activations": act_term,
             "optimizer": opt_bytes, "max_transient": max_layer,
-            "total": params_bytes + act_term + opt_bytes + max_layer}
+            "feature_cache": cache_b,
+            "total": params_bytes + act_term + opt_bytes + max_layer + cache_b}
 
 
 def full_model_memory_bytes(cfg, batch: int, seq: int, *,

@@ -1,0 +1,3 @@
+from repro.dist.sharding import (batch_spec, fsdp_tree_shardings,
+                                 logical_to_spec, make_rules, shard_batch,
+                                 tree_shardings)

@@ -9,6 +9,12 @@ Oort         — utility-based selection (stat util x time penalty).
 
 Each returns the same history format as the servers in fl/server.py so the
 benchmark harness plots them together (paper Figs. 7-8 / Table I).
+
+Local training runs through ``fl/engine.py``: homogeneous baselines fuse
+the whole cohort into one dispatch; DepthFL/HeteroFL fuse per depth/scale
+group (clients within a group share sub-model shapes) and combine the group
+aggregates by total dataset weight — algebraically identical to the seed's
+per-client aggregation.
 """
 from __future__ import annotations
 
@@ -22,10 +28,12 @@ import numpy as np
 from repro.core import freezing_cnn as fz
 from repro.core.output_module import cnn_fc_only_apply, cnn_fc_only_init
 from repro.fl.client import SimClient
-from repro.fl.server import FedAvgServer, RoundResult, _weighted_avg, cnn_stage_memory_bytes
+from repro.fl.engine import RoundEngine
+from repro.fl.server import (FedAvgServer, RoundResult, _weighted_avg,
+                             cnn_stage_memory_bytes)
 from repro.models.cnn import CNN, CNNConfig
 from repro.models.module import PFac
-from repro.optim import apply_updates, clip_by_global_norm, sgd
+from repro.optim import sgd
 
 
 def full_model_memory(model: CNN, batch_size: int) -> float:
@@ -95,11 +103,13 @@ def run_exclusivefl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
 
 def run_depthfl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
                 batch_size: int = 32, clients_per_round: int = 10,
-                eval_fn=None, seed: int = 0, local_epochs: int = 1) -> Dict:
+                eval_fn=None, seed: int = 0, local_epochs: int = 1,
+                fused: bool = True) -> Dict:
     """Depth-scaled submodels: client c trains stages [0..d_c) + aux head."""
     model = CNN(cfg)
     n_stages = len(cfg.stage_sizes)
     params, state = model.init(jax.random.PRNGKey(seed))
+    clients_by_id = {c.client_id: c for c in clients}
     # aux classifier per non-final depth
     fac = PFac(jax.random.PRNGKey(seed + 1), dtype=jnp.float32)
     aux = {d: cnn_fc_only_init(fac.sub(f"aux{d}"), cfg, d) for d in range(n_stages - 1)}
@@ -115,83 +125,67 @@ def run_depthfl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
         depths[c.client_id] = d
     participation = np.mean([depths[c.client_id] == n_stages - 1 for c in clients])
 
-    def make_step(depth: int):
-        def loss_fn(p, st, batch):
+    def make_engine(depth: int) -> RoundEngine:
+        def loss_fn(p, frozen_unused, st, batch):
             h = batch["x"]
             if cfg.kind == "resnet":
                 h, st = model.stem(p, st, h, train=True)
             h, st = model.run_stages(p, st, h, 0, depth + 1, train=True)
             logits = model.head(p, h) if depth == n_stages - 1 \
                 else cnn_fc_only_apply(p["aux"], h)
-            lf = logits.astype(jnp.float32)
-            logz = jax.scipy.special.logsumexp(lf, axis=-1)
-            gold = jnp.take_along_axis(lf, batch["y"][:, None], axis=-1)[:, 0]
-            return jnp.mean(logz - gold), st
+            return fz.softmax_xent(logits, batch["y"]), st
 
-        opt = sgd(0.05)
+        return RoundEngine(loss_fn=loss_fn, optimizer=sgd(0.05),
+                           batch_size=batch_size, local_epochs=local_epochs,
+                           fused=fused)
 
-        @jax.jit
-        def step(p, frozen_unused, st, opt_state, batch):
-            (loss, new_st), grads = jax.value_and_grad(loss_fn, has_aux=True)(p, st, batch)
-            grads, _ = clip_by_global_norm(grads, 10.0)
-            ups, opt_state = opt.update(grads, opt_state, p)
-            return apply_updates(p, ups), new_st, opt_state, loss
-
-        return step, opt
-
-    steps = {d: make_step(d) for d in range(n_stages)}
+    engines = {d: make_engine(d) for d in range(n_stages)}
     rng = np.random.RandomState(seed)
     history = []
     for r in range(rounds):
         sel = list(rng.choice([c.client_id for c in clients],
                               size=min(clients_per_round, len(clients)), replace=False))
-        updates, weights, losses = [], [], []
+        # one fused dispatch per depth group (shapes are homogeneous within)
+        by_depth: Dict[int, List[int]] = {}
         for cid in sel:
-            c = next(cl for cl in clients if cl.client_id == cid)
-            d = depths[cid]
+            by_depth.setdefault(depths[cid], []).append(cid)
+        group_out: Dict[int, Dict] = {}
+        losses_all = []
+        for d, cids in by_depth.items():
             sub = {k: params[k] for k in params if k != "fc"}
             if d == n_stages - 1:
                 sub["fc"] = params["fc"]
             else:
-                sub = dict(sub)
                 sub["aux"] = aux[d]
-            step, opt = steps[d]
-            p_i, s_i, loss_i, _ = c.local_train(step, sub, None, state,
-                                                opt.init(sub),
-                                                batch_size=batch_size,
-                                                epochs=local_epochs, round_idx=r)
-            updates.append((cid, d, p_i, s_i))
-            weights.append(c.num_samples)
-            losses.append(loss_i)
-        # per-stage aggregation over clients that trained the stage
-        w = np.asarray(weights, np.float64)
+            p_g, s_g, l_g = engines[d].run_round(clients_by_id, cids, sub,
+                                                 state, r)
+            W_g = float(sum(clients_by_id[c].num_samples for c in cids))
+            group_out[d] = {"params": p_g, "state": s_g, "weight": W_g}
+            losses_all.extend(l_g.values())
+        # per-stage aggregation over depth groups that trained the stage
         new_params = dict(params)
+        new_params["stages"] = dict(new_params["stages"])
         for s in range(n_stages):
-            having = [(i, u) for i, u in enumerate(updates) if u[1] >= s]
+            having = [g for d, g in group_out.items() if d >= s]
             if not having:
                 continue
-            ws = np.asarray([w[i] for i, _ in having])
-            ws /= ws.sum()
-            new_params["stages"] = dict(new_params["stages"])
+            ws = np.asarray([g["weight"] for g in having])
+            ws = ws / ws.sum()
             new_params["stages"][f"stage{s}"] = _weighted_avg(
-                [u[2]["stages"][f"stage{s}"] for _, u in having], ws)
+                [g["params"]["stages"][f"stage{s}"] for g in having], ws)
+        ws_all = np.asarray([g["weight"] for g in group_out.values()])
+        ws_all = ws_all / ws_all.sum()
         if cfg.kind == "resnet":
-            ws = w / w.sum()
-            new_params["stem"] = _weighted_avg([u[2]["stem"] for u in updates], ws)
-        fc_have = [(i, u) for i, u in enumerate(updates) if u[1] == n_stages - 1]
-        if fc_have:
-            ws = np.asarray([w[i] for i, _ in fc_have])
-            ws /= ws.sum()
-            new_params["fc"] = _weighted_avg([u[2]["fc"] for _, u in fc_have], ws)
+            new_params["stem"] = _weighted_avg(
+                [g["params"]["stem"] for g in group_out.values()], ws_all)
+        if n_stages - 1 in group_out:
+            new_params["fc"] = group_out[n_stages - 1]["params"]["fc"]
         for d in range(n_stages - 1):
-            have = [(i, u) for i, u in enumerate(updates) if u[1] == d]
-            if have:
-                ws = np.asarray([w[i] for i, _ in have])
-                ws /= ws.sum()
-                aux[d] = _weighted_avg([u[2]["aux"] for _, u in have], ws)
+            if d in group_out:
+                aux[d] = group_out[d]["params"]["aux"]
         params = new_params
-        state = _weighted_avg([u[3] for u in updates], w / w.sum())
-        rr = RoundResult(r, n_stages - 1, float(np.mean(losses)), selected=sel)
+        state = _weighted_avg([g["state"] for g in group_out.values()], ws_all)
+        rr = RoundResult(r, n_stages - 1, float(np.mean(losses_all)), selected=sel)
         if eval_fn is not None and r % 10 == 0:
             rr.test_acc = eval_fn(model, params, state)
         history.append(rr)
@@ -215,9 +209,11 @@ def _slice_like(full, small):
 
 def run_heterofl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
                  batch_size: int = 32, clients_per_round: int = 10,
-                 eval_fn=None, seed: int = 0, local_epochs: int = 1) -> Dict:
+                 eval_fn=None, seed: int = 0, local_epochs: int = 1,
+                 fused: bool = True) -> Dict:
     model_full = CNN(cfg)
     params_full, state_full = model_full.init(jax.random.PRNGKey(seed))
+    clients_by_id = {c.client_id: c for c in clients}
     # assign the largest scale whose model fits each client
     scale_of = {}
     models = {s: CNN(scaled_config(cfg, s)) for s in _HFL_SCALES}
@@ -229,61 +225,49 @@ def run_heterofl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
                 break
         scale_of[c.client_id] = sc
 
-    def make_step(scale):
+    def make_engine(scale) -> RoundEngine:
         model_s = models[scale]
-        opt = sgd(0.05)
 
-        @jax.jit
-        def step(p, frozen_unused, st, opt_state, batch):
-            def loss_fn(p_, st_):
-                return model_s.loss(p_, st_, batch, train=True)
+        def loss_fn(p, frozen_unused, st, batch):
+            return model_s.loss(p, st, batch, train=True)
 
-            (loss, new_st), grads = jax.value_and_grad(
-                lambda p_: loss_fn(p_, st), has_aux=True)(p)
-            grads, _ = clip_by_global_norm(grads, 10.0)
-            ups, opt_state2 = opt.update(grads, opt_state, p)
-            return apply_updates(p, ups), new_st, opt_state2, loss
+        return RoundEngine(loss_fn=loss_fn, optimizer=sgd(0.05),
+                           batch_size=batch_size, local_epochs=local_epochs,
+                           fused=fused)
 
-        return step, opt
-
-    steps = {s: make_step(s) for s in _HFL_SCALES}
+    engines = {s: make_engine(s) for s in _HFL_SCALES}
     rng = np.random.RandomState(seed)
     history = []
     n_stages = len(cfg.stage_sizes)
     for r in range(rounds):
         sel = list(rng.choice([c.client_id for c in clients],
                               size=min(clients_per_round, len(clients)), replace=False))
-        # slice out submodels
-        updates, weights = [], []
-        losses = []
+        by_scale: Dict[float, List[int]] = {}
         for cid in sel:
-            c = next(cl for cl in clients if cl.client_id == cid)
-            sc = scale_of[cid]
-            sub_shape, sub_state_shape = jax.eval_shape(
-                lambda: models[sc].init(jax.random.PRNGKey(0)))
-            sub = jax.tree.map(_slice_like, params_full, sub_shape)
-            sub_st = jax.tree.map(_slice_like, state_full, sub_state_shape)
-            step, opt = steps[sc]
-            p_i, s_i, loss_i, _ = c.local_train(step, sub, None, sub_st,
-                                                opt.init(sub),
-                                                batch_size=batch_size,
-                                                epochs=local_epochs, round_idx=r)
-            updates.append((p_i, s_i))
-            weights.append(c.num_samples)
-            losses.append(loss_i)
-        # overlapping-slice aggregation into the full model
+            by_scale.setdefault(scale_of[cid], []).append(cid)
+        # one fused dispatch per scale group, then overlapping-slice agg
         acc = jax.tree.map(lambda x: np.zeros(x.shape, np.float64), params_full)
         cnt = jax.tree.map(lambda x: np.zeros(x.shape, np.float64), params_full)
         acc_s = jax.tree.map(lambda x: np.zeros(x.shape, np.float64), state_full)
         cnt_s = jax.tree.map(lambda x: np.zeros(x.shape, np.float64), state_full)
-        for (p_i, s_i), wi in zip(updates, weights):
+        losses_all = []
+        for sc, cids in by_scale.items():
+            sub_shape, sub_state_shape = jax.eval_shape(
+                lambda: models[sc].init(jax.random.PRNGKey(0)))
+            sub = jax.tree.map(_slice_like, params_full, sub_shape)
+            sub_st = jax.tree.map(_slice_like, state_full, sub_state_shape)
+            p_g, s_g, l_g = engines[sc].run_round(clients_by_id, cids, sub,
+                                                  sub_st, r)
+            W_g = float(sum(clients_by_id[c].num_samples for c in cids))
+            losses_all.extend(l_g.values())
+
             def add(a, c_, small):
                 sl = tuple(slice(0, s) for s in small.shape)
-                a[sl] += np.asarray(small, np.float64) * wi
-                c_[sl] += wi
+                a[sl] += np.asarray(small, np.float64) * W_g
+                c_[sl] += W_g
 
-            jax.tree.map(add, acc, cnt, p_i)
-            jax.tree.map(add, acc_s, cnt_s, s_i)
+            jax.tree.map(add, acc, cnt, p_g)
+            jax.tree.map(add, acc_s, cnt_s, s_g)
 
         def finalize(a, c_, full):
             out = np.asarray(full, np.float64).copy()
@@ -293,7 +277,7 @@ def run_heterofl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
 
         params_full = jax.tree.map(finalize, acc, cnt, params_full)
         state_full = jax.tree.map(finalize, acc_s, cnt_s, state_full)
-        rr = RoundResult(r, n_stages - 1, float(np.mean(losses)), selected=sel)
+        rr = RoundResult(r, n_stages - 1, float(np.mean(losses_all)), selected=sel)
         if eval_fn is not None and r % 10 == 0:
             rr.test_acc = eval_fn(model_full, params_full, state_full)
         history.append(rr)
@@ -320,23 +304,36 @@ def run_tifl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
     for c in eligible:
         t = times[c.client_id]
         tiers[0 if t <= qs[0] else (1 if t <= qs[1] else 2)].append(c.client_id)
-    rng = np.random.RandomState(seed)
     params, state = model.init(jax.random.PRNGKey(seed))
-    srv = FedAvgServer(model, eligible, batch_size=batch_size, seed=seed, **kw)
+    clients_by_id = {c.client_id: c for c in eligible}
+
+    def full_loss(p, frozen_unused, st, batch):
+        return model.loss(p, st, batch, train=True)
+
+    optimizer_fn = kw.pop("optimizer_fn", lambda: sgd(0.05))
+    local_epochs = kw.pop("local_epochs", 1)
+    fused = kw.pop("fused", True)
+    if kw:
+        raise TypeError(f"run_tifl: unknown kwargs {sorted(kw)}")
+    # ONE engine reused across rounds (the seed rebuilt a jitted step per
+    # round-scoped sub-server, recompiling every round)
+    engine = RoundEngine(loss_fn=full_loss, optimizer=optimizer_fn(),
+                         batch_size=batch_size, local_epochs=local_epochs,
+                         fused=fused)
+    n_stages = len(cfg.stage_sizes)
+    rng = np.random.RandomState(seed)
     # monkey-select: restrict each round to one tier
     history = []
     for r in range(rounds):
         tier = [t for t in tiers.values() if t][r % sum(1 for t in tiers.values() if t)]
-        sel_clients = [c for c in eligible if c.client_id in tier]
-        sub = FedAvgServer(model, sel_clients, batch_size=batch_size,
-                           clients_per_round=min(clients_per_round, len(sel_clients)),
-                           seed=seed + r)
-        res = sub.run(params, state, rounds=1,
-                      eval_fn=(lambda p, s, st: eval_fn(model, p, s))
-                      if (eval_fn and r % 10 == 0) else None)
-        params, state = res["params"], res["state"]
-        rr = res["history"][0]
-        rr.round_idx = r
+        sel = list(rng.choice(tier, size=min(clients_per_round, len(tier)),
+                              replace=False))
+        params, state, losses = engine.run_round(clients_by_id, sel, params,
+                                                 state, r)
+        rr = RoundResult(r, n_stages - 1, float(np.mean(list(losses.values()))),
+                         selected=sel)
+        if eval_fn is not None and r % 10 == 0:
+            rr.test_acc = eval_fn(model, params, state)
         history.append(rr)
     return {"params": params, "state": state, "history": history,
             "participation": len(eligible) / len(clients), "model": model}
@@ -344,7 +341,8 @@ def run_tifl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
 
 def run_oort(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
              batch_size: int = 32, clients_per_round: int = 10,
-             eval_fn=None, seed: int = 0, local_epochs: int = 1) -> Dict:
+             eval_fn=None, seed: int = 0, local_epochs: int = 1,
+             fused: bool = True) -> Dict:
     from repro.core.selector.bandit import UtilBandit
 
     model = CNN(cfg)
@@ -352,44 +350,31 @@ def run_oort(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
     eligible = [c for c in clients if c.memory_bytes >= req]
     if not eligible:
         return {"inoperative": True, "participation": 0.0, "history": []}
+    clients_by_id = {c.client_id: c for c in eligible}
     params, state = model.init(jax.random.PRNGKey(seed))
     bandit = UtilBandit(epsilon=0.3, seed=seed)
-    opt = sgd(0.05)
 
-    def full_loss(p, st, batch):
+    def full_loss(p, frozen_unused, st, batch):
         return model.loss(p, st, batch, train=True)
 
-    @jax.jit
-    def step_fn(p, frozen_unused, st, opt_state, batch):
-        (loss, new_st), grads = jax.value_and_grad(full_loss, has_aux=True)(p, st, batch)
-        grads, _ = clip_by_global_norm(grads, 10.0)
-        ups, opt_state = opt.update(grads, opt_state, p)
-        return apply_updates(p, ups), new_st, opt_state, loss
-
+    engine = RoundEngine(loss_fn=full_loss, optimizer=sgd(0.05),
+                         batch_size=batch_size, local_epochs=local_epochs,
+                         fused=fused)
     history = []
     n_stages = len(cfg.stage_sizes)
     for r in range(rounds):
         sel = bandit.pick([c.client_id for c in eligible],
                           min(clients_per_round, len(eligible)))
-        updates, weights, losses = [], [], []
-        for cid in sel:
-            c = next(cl for cl in eligible if cl.client_id == cid)
-            p_i, s_i, loss_i, _ = c.local_train(step_fn, params, None, state,
-                                                opt.init(params),
-                                                batch_size=batch_size,
-                                                epochs=local_epochs, round_idx=r)
-            updates.append((p_i, s_i))
-            weights.append(c.num_samples)
-            losses.append(loss_i)
+        params, state, losses = engine.run_round(clients_by_id, list(sel),
+                                                 params, state, r)
+        for cid, loss_i in losses.items():
+            c = clients_by_id[cid]
             # Oort stat util: |D_i| sqrt(mean loss^2) - time penalty
             t_i = c.num_samples / c.capability
             bandit.update(cid, c.num_samples * np.sqrt(loss_i ** 2) - 0.1 * t_i)
         bandit.next_round()
-        w = np.asarray(weights, np.float64)
-        w /= w.sum()
-        params = _weighted_avg([u[0] for u in updates], w)
-        state = _weighted_avg([u[1] for u in updates], w)
-        rr = RoundResult(r, n_stages - 1, float(np.mean(losses)), selected=list(sel))
+        rr = RoundResult(r, n_stages - 1, float(np.mean(list(losses.values()))),
+                         selected=list(sel))
         if eval_fn is not None and r % 10 == 0:
             rr.test_acc = eval_fn(model, params, state)
         history.append(rr)

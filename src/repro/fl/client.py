@@ -23,6 +23,21 @@ LOW_CONTENTION_GB = (2.0, 3.0, 4.0, 6.0, 8.0)
 CAPABILITY_TIERS = (0.3e9, 1.0e9, 2.5e9, 5.0e9, 10.0e9)
 
 
+def batch_index_plan(n: int, batch_size: int, epochs: int, seed: int
+                     ) -> List[np.ndarray]:
+    """The exact minibatch index sequence a client runs locally: per-epoch
+    permutation, drop-last. Shared by the sequential generator below AND the
+    fused round engine's host-side batch stacking, so both execution paths
+    consume bit-identical data for a given (client, round) seed."""
+    rng = np.random.RandomState(seed)
+    plan = []
+    for _ in range(epochs):
+        order = rng.permutation(n)
+        for i in range(0, n - batch_size + 1, batch_size):
+            plan.append(order[i:i + batch_size])
+    return plan
+
+
 @dataclass
 class SimClient:
     client_id: int
@@ -36,14 +51,12 @@ class SimClient:
     def num_samples(self) -> int:
         return len(self.data["y"]) if "y" in self.data else len(self.data["labels"])
 
+    def round_seed(self, round_idx: int) -> int:
+        return self.seed * 99991 + round_idx
+
     def batches(self, batch_size: int, epochs: int, seed: int):
-        rng = np.random.RandomState(seed)
-        n = self.num_samples
-        for _ in range(epochs):
-            order = rng.permutation(n)
-            for i in range(0, n - batch_size + 1, batch_size):
-                idx = order[i:i + batch_size]
-                yield {k: v[idx] for k, v in self.data.items()}
+        for idx in batch_index_plan(self.num_samples, batch_size, epochs, seed):
+            yield {k: v[idx] for k, v in self.data.items()}
 
     def local_train(self, step_fn: Callable, active, frozen, bn_state, opt_state,
                     *, batch_size: int, epochs: int, round_idx: int):
@@ -51,7 +64,7 @@ class SimClient:
 
         Returns (active, bn_state, mean_loss, num_batches)."""
         losses = []
-        for batch in self.batches(batch_size, epochs, self.seed * 99991 + round_idx):
+        for batch in self.batches(batch_size, epochs, self.round_seed(round_idx)):
             jb = {k: jnp.asarray(v) for k, v in batch.items()}
             active, bn_state, opt_state, loss = step_fn(active, frozen, bn_state,
                                                         opt_state, jb)

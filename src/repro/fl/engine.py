@@ -1,0 +1,397 @@
+"""Fused federated round engine: one compiled dispatch per cohort, plus a
+frozen-prefix activation cache.
+
+The seed simulator executed each round as ``K clients x E epochs x B
+minibatches`` separate jitted calls, each with a host->device batch copy and
+a blocking ``float(loss)`` sync, and re-ran the frozen prefix's forward on
+every one of them. This module collapses both costs:
+
+  * ``make_fused_round`` stacks the K selected clients' minibatch sequences
+    into a leading client axis and runs the whole round as ONE
+    ``jax.jit(vmap(lax.scan(local_sgd_step)))`` with the Eq. 1
+    dataset-weighted aggregation inside the compiled function. Clients with
+    fewer local batches than the cohort maximum are masked per scan step
+    (updates/losses suppressed once a client's plan is exhausted), so the
+    fused result matches the sequential per-client loop exactly for fixed
+    seeds.
+  * ``RoundEngine`` adds the frozen-prefix feature cache: when a stage
+    begins, each participating client runs the frozen prefix ONCE over its
+    shard (eval mode, behind the ``stop_gradient`` boundary of
+    ``cnn_stage_forward``/``stage_forward``) and local training thereafter
+    consumes cached features — progressive training's later stages become
+    shallow-model training (NeuLite arXiv:2408.10826, ProFL
+    arXiv:2404.13349). The cache is invalidated on stage growth and is
+    opt-in per client: the server checks the memory model's cache hook
+    (``cnn_stage_memory_bytes(..., cache_samples=n)`` /
+    ``stage_memory_bytes(..., cache_tokens=n)``) and declines it on
+    memory-poor clients, who silently fall back to full recompute.
+
+``fused=False`` is the escape hatch kept for the deadline/straggler path:
+it runs the seed-identical sequential per-client loop (still optionally
+consuming cached features).
+
+The LM backend's ``make_fed_round_step`` (core/freezing.py) already fuses
+pods inside one jit; ``make_lm_cached_fed_round_step`` below is its
+cache-consuming sibling with ``donate_argnums`` on (active, opt_state).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.client import SimClient, batch_index_plan
+from repro.optim import Optimizer, apply_updates, clip_by_global_norm
+
+LossFn = Callable[[Any, Any, Any, Dict], Tuple[jnp.ndarray, Any]]
+#   loss_fn(params, frozen, state, batch) -> (loss, new_state)
+
+
+# ---------------------------------------------------------------------------
+# Host-side aggregation (shared by servers/baselines; Eq. 1)
+# ---------------------------------------------------------------------------
+
+
+def weighted_avg(trees: Sequence, w: np.ndarray):
+    """Dataset-weighted parameter average over a list of pytrees (Eq. 1)."""
+    out = trees[0]
+    out = jax.tree.map(lambda x: x.astype(jnp.float32) * float(w[0]), out)
+    for t, wi in zip(trees[1:], w[1:]):
+        out = jax.tree.map(lambda a, x: a + x.astype(jnp.float32) * float(wi),
+                           out, t)
+    ref = trees[0]
+    return jax.tree.map(lambda a, r: a.astype(r.dtype), out, ref)
+
+
+# ---------------------------------------------------------------------------
+# Fused multi-client round (tentpole #2)
+# ---------------------------------------------------------------------------
+
+
+def make_fused_round(loss_fn: LossFn, optimizer: Optimizer, *,
+                     clip_norm: float = 10.0, unroll: Optional[bool] = None):
+    """Build the single-dispatch round function.
+
+    Returned callable signature::
+
+        round_fn(params, frozen, state, batches, nb_live, weights)
+          params:  cohort-shared start params (no client dim)
+          frozen:  replicated frozen tree (or a placeholder when unused)
+          state:   cohort-shared mutable state (BN stats; {} when unused)
+          batches: pytree with leading dims [K, nb, batch, ...]
+          nb_live: [K] int32 — client i's real batch count (steps >= nb_live
+                   are padding and masked out)
+          weights: [K] float — Eq. 1 aggregation weights (|D_i|)
+          -> (agg_params, agg_state, per_client_mean_loss [K])
+
+    Lowering strategy (``unroll``, default auto by backend):
+      * accelerators: ``vmap(lax.scan(step))`` over the client axis — XLA
+        lowers the per-client-weight contractions to efficient batched
+        matmuls/convs and the K local trainings run data-parallel.
+      * CPU (``unroll=True``): identical semantics, but the client axis is a
+        statically-unrolled loop and the local steps use ``scan(unroll=True)``
+        — the CPU backend executes convolutions inside ``while`` bodies on a
+        ~4x slower single-threaded path and has no fast batched-weight conv,
+        so the vmap form LOSES to the host loop there (measured).
+      Both forms are one jit dispatch with the Eq. 1 weighted aggregation
+      inside the compiled function and ONE host sync per round.
+
+    The stacked ``batches`` buffer is donated on accelerators — it is
+    rebuilt from host data every round. Params/state are NOT donated because
+    a round may split into several fused cohorts (cached vs recompute
+    groups) that share them.
+    """
+    if unroll is None:
+        unroll = jax.default_backend() == "cpu"
+
+    def local_train(params, frozen, state, batches, nb):
+        opt_state = optimizer.init(params)
+
+        def one(carry, batch):
+            p, st, ost, t, lsum = carry
+            (loss, st2), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                p, frozen, st, batch)
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+            ups, ost2 = optimizer.update(grads, ost, p)
+            p2 = apply_updates(p, ups)
+            live = t < nb
+
+            def pick(new, old):
+                return jax.tree.map(lambda a, b: jnp.where(live, a, b), new, old)
+
+            return (pick(p2, p), pick(st2, st), pick(ost2, ost), t + 1,
+                    lsum + jnp.where(live, loss, 0.0)), None
+
+        init = (params, state, opt_state, jnp.int32(0), jnp.float32(0.0))
+        (p, st, _, _, lsum), _ = jax.lax.scan(one, init, batches,
+                                              unroll=True if unroll else 1)
+        return p, st, lsum / jnp.maximum(nb, 1).astype(jnp.float32)
+
+    def round_fn(params, frozen, state, batches, nb_live, weights):
+        K = nb_live.shape[0]
+        w = (weights / jnp.sum(weights)).astype(jnp.float32)
+        if unroll:
+            def wsum(acc, tree, wi):
+                contrib = jax.tree.map(lambda b: wi * b.astype(jnp.float32), tree)
+                return contrib if acc is None else jax.tree.map(jnp.add, acc,
+                                                                contrib)
+
+            agg_p = agg_st = None
+            losses = []
+            for i in range(K):
+                p_i, st_i, loss_i = local_train(
+                    params, frozen, state,
+                    jax.tree.map(lambda x: x[i], batches), nb_live[i])
+                agg_p = wsum(agg_p, p_i, w[i])
+                agg_st = wsum(agg_st, st_i, w[i])
+                losses.append(loss_i)
+            cast = lambda acc, ref: jax.tree.map(
+                lambda a, r: a.astype(r.dtype), acc, ref)
+            return cast(agg_p, params), cast(agg_st, state), jnp.stack(losses)
+        bcast = lambda x: jnp.broadcast_to(x[None], (K,) + x.shape)
+        podded = jax.tree.map(bcast, params)
+        st_pod = jax.tree.map(bcast, state)
+        out_p, out_st, losses = jax.vmap(
+            local_train, in_axes=(0, None, 0, 0, 0))(
+            podded, frozen, st_pod, batches, nb_live)
+
+        def agg(x):
+            return jnp.einsum("k,k...->...", w,
+                              x.astype(jnp.float32)).astype(x.dtype)
+
+        return jax.tree.map(agg, out_p), jax.tree.map(agg, out_st), losses
+
+    # the CPU backend cannot alias donated buffers — donate only where it helps
+    donate = (3,) if jax.default_backend() != "cpu" else ()
+    return jax.jit(round_fn, donate_argnums=donate)
+
+
+# ---------------------------------------------------------------------------
+# Round engine (tentpole #1 + #2 glue): cache + dispatch + grouping
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class RoundEngine:
+    """Executes federated rounds for a cohort of ``SimClient``s.
+
+    ``loss_fn`` is the full-recompute stage loss; ``cached_loss_fn`` (when
+    given) is its twin consuming pre-extracted prefix features under the
+    same ``batch["x"]`` key; ``feature_fn(x) -> features`` is the frozen
+    prefix itself. All three close over the current stage's frozen tree /
+    plan — construct a fresh engine at every stage boundary, which is also
+    what invalidates the feature cache on model growth.
+    """
+    loss_fn: LossFn
+    optimizer: Optimizer
+    frozen: Any = None
+    cached_loss_fn: Optional[LossFn] = None
+    feature_fn: Optional[Callable] = None
+    batch_size: int = 32
+    local_epochs: int = 1
+    clip_norm: float = 10.0
+    fused: bool = True
+    _features: Dict[int, np.ndarray] = field(default_factory=dict, repr=False)
+    _jit_cache: Dict[str, Callable] = field(default_factory=dict, repr=False)
+
+    # ----- frozen-prefix feature cache -----
+
+    def features_for(self, client: SimClient) -> np.ndarray:
+        """Client's shard pushed through the frozen prefix once (eval mode);
+        memoized until the engine (== the stage) is replaced."""
+        if client.client_id not in self._features:
+            fn = self._jit_cache.setdefault("feature", jax.jit(self.feature_fn))
+            self._features[client.client_id] = np.asarray(
+                fn(jnp.asarray(client.data["x"])))
+        return self._features[client.client_id]
+
+    def cache_nbytes(self) -> int:
+        return sum(f.nbytes for f in self._features.values())
+
+    # ----- round execution -----
+
+    def run_round(self, clients: Dict[int, SimClient], selected: List[int],
+                  params, state, round_idx: int, *,
+                  use_cache: Optional[Dict[int, bool]] = None,
+                  sequential: Optional[bool] = None
+                  ) -> Tuple[Any, Any, Dict[int, float]]:
+        """One federated round over ``selected``. Returns (params, state,
+        per-client mean loss). Splits the cohort into a cached-feature group
+        and a recompute group (their batch shapes differ), runs each as one
+        fused dispatch, and combines the group aggregates by total weight —
+        algebraically the same Eq. 1 average as a single flat cohort."""
+        use_cache = use_cache or {}
+        seq = (not self.fused) if sequential is None else sequential
+        groups: Dict[bool, List[int]] = {}
+        for cid in selected:
+            cached = bool(use_cache.get(cid)) and self.cached_loss_fn is not None
+            groups.setdefault(cached, []).append(cid)
+
+        partials = []  # (agg_params, agg_state, group_weight)
+        losses: Dict[int, float] = {}
+        for cached, cids in groups.items():
+            runner = self._run_sequential if seq else self._run_fused
+            p_g, s_g, l_g, w_g = runner(clients, cids, params, state,
+                                        round_idx, cached=cached)
+            partials.append((p_g, s_g, w_g))
+            losses.update(l_g)
+        if len(partials) == 1:
+            return partials[0][0], partials[0][1], losses
+        w = np.asarray([p[2] for p in partials], np.float64)
+        w /= w.sum()
+        return (weighted_avg([p[0] for p in partials], w),
+                weighted_avg([p[1] for p in partials], w), losses)
+
+    # ----- fused path -----
+
+    def _client_arrays(self, client: SimClient, cached: bool) -> Dict[str, np.ndarray]:
+        if cached:
+            data = dict(client.data)
+            data["x"] = self.features_for(client)
+            return data
+        return client.data
+
+    def _run_fused(self, clients, cids, params, state, round_idx, *, cached):
+        bs, ep = self.batch_size, self.local_epochs
+        plans = {cid: batch_index_plan(clients[cid].num_samples, bs, ep,
+                                       clients[cid].round_seed(round_idx))
+                 for cid in cids}
+        nb_live = np.asarray([len(plans[cid]) for cid in cids], np.int32)
+        nb = max(int(nb_live.max()), 1)
+        stacked: Dict[str, np.ndarray] = {}
+        sample = self._client_arrays(clients[cids[0]], cached)
+        for key in sample:
+            rows = []
+            for cid in cids:
+                data = self._client_arrays(clients[cid], cached)[key]
+                plan = plans[cid]
+                # pad exhausted clients by cycling their plan (masked anyway)
+                idx = np.stack([plan[t % len(plan)] if plan
+                                else np.zeros(bs, np.int64)
+                                for t in range(nb)])
+                rows.append(data[idx])
+            stacked[key] = np.stack(rows)
+        weights = np.asarray([clients[cid].num_samples for cid in cids],
+                             np.float32)
+        key = "fused_cached" if cached else "fused"
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            fn = make_fused_round(self.cached_loss_fn if cached else self.loss_fn,
+                                  self.optimizer, clip_norm=self.clip_norm)
+            self._jit_cache[key] = fn
+        frozen = {} if cached else (self.frozen if self.frozen is not None else {})
+        p_g, s_g, l_g = fn(params, frozen, state,
+                           {k: jnp.asarray(v) for k, v in stacked.items()},
+                           jnp.asarray(nb_live), jnp.asarray(weights))
+        l_host = np.asarray(l_g)  # ONE blocking sync for the whole cohort
+        return (p_g, s_g, {cid: float(l_host[i]) for i, cid in enumerate(cids)},
+                float(weights.sum()))
+
+    # ----- sequential escape hatch (deadline/straggler path) -----
+
+    def _seq_step(self, cached: bool):
+        key = "seq_cached" if cached else "seq"
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            loss_fn = self.cached_loss_fn if cached else self.loss_fn
+
+            def step(p, frozen, st, ost, batch):
+                (loss, st2), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                    p, frozen, st, batch)
+                grads, _ = clip_by_global_norm(grads, self.clip_norm)
+                ups, ost2 = self.optimizer.update(grads, ost, p)
+                return apply_updates(p, ups), st2, ost2, loss
+
+            fn = self._jit_cache[key] = jax.jit(step)
+        return fn
+
+    def _run_sequential(self, clients, cids, params, state, round_idx, *, cached):
+        step = self._seq_step(cached)
+        frozen = {} if cached else (self.frozen if self.frozen is not None else {})
+        updates, weights, losses = [], [], {}
+        for cid in cids:
+            c = clients[cid]
+            data = self._client_arrays(c, cached)
+            p_i, s_i = params, state
+            ost = self.optimizer.init(params)
+            batch_losses = []
+            for idx in batch_index_plan(c.num_samples, self.batch_size,
+                                        self.local_epochs,
+                                        c.round_seed(round_idx)):
+                jb = {k: jnp.asarray(v[idx]) for k, v in data.items()}
+                p_i, s_i, ost, loss = step(p_i, frozen, s_i, ost, jb)
+                batch_losses.append(float(loss))
+            updates.append((p_i, s_i))
+            weights.append(c.num_samples)
+            losses[cid] = float(np.mean(batch_losses)) if batch_losses else 0.0
+        w = np.asarray(weights, np.float64)
+        w /= w.sum()
+        return (weighted_avg([u[0] for u in updates], w),
+                weighted_avg([u[1] for u in updates], w), losses,
+                float(np.sum(weights)))
+
+
+# ---------------------------------------------------------------------------
+# LM backend: cached-prefix federated round (reuses core/freezing.py's
+# pod-fused make_fed_round_step shape; consumes features instead)
+# ---------------------------------------------------------------------------
+
+
+def make_lm_cached_fed_round_step(model, plan, local_opt: Optimizer, *,
+                                  num_pods: int, local_steps: int,
+                                  remat: bool = True, clip_norm: float = 1.0,
+                                  constrain_podded=None, remat_policy=None,
+                                  donate: bool = True):
+    """Cached sibling of ``freezing.make_fed_round_step``: the batch carries
+    ``h0``/``aux0`` (frozen-prefix outputs, computed once per stage via
+    ``freezing.stage_prefix_features``) with leading dims
+    [num_pods, local_steps, ...]; only the active suffix is executed and
+    differentiated. Jitted with ``donate_argnums`` on the active params (the
+    per-pod optimizer state is born and dies inside the jit).
+
+    Requires a static prefix — caching under a training embedding (stage 0)
+    or a weight-tied shared-attention prefix (zamba2) would silently train
+    on stale features, so that is rejected here."""
+    from repro.core.freezing import cached_stage_loss_fn, prefix_is_static
+
+    if not prefix_is_static(plan):
+        raise ValueError(
+            f"stage {plan.stage}: frozen prefix is not a fixed feature "
+            "extractor (training embedding or tied shared-attention in the "
+            "prefix) — use freezing.make_fed_round_step instead")
+
+    loss_fn = cached_stage_loss_fn(model, plan, remat=remat,
+                                   remat_policy=remat_policy)
+
+    def local_train(active, batches):
+        opt_state = local_opt.init(active)
+
+        def one(carry, batch):
+            act, ost = carry
+            loss, grads = jax.value_and_grad(loss_fn)(act, batch)
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+            ups, ost = local_opt.update(grads, ost, act)
+            return (apply_updates(act, ups), ost), loss
+
+        (active, _), losses = jax.lax.scan(one, (active, opt_state), batches)
+        return active, jnp.mean(losses)
+
+    def round_step(active, batch, weights):
+        podded = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (num_pods,) + x.shape), active)
+        if constrain_podded is not None:
+            podded = constrain_podded(podded)
+        podded, losses = jax.vmap(local_train, in_axes=(0, 0))(podded, batch)
+        w = (weights / jnp.sum(weights)).astype(jnp.float32)
+
+        def agg(x):
+            return jnp.einsum("p,p...->...", w,
+                              x.astype(jnp.float32)).astype(x.dtype)
+
+        return jax.tree.map(agg, podded), {"loss": jnp.sum(w * losses)}
+
+    donate = donate and jax.default_backend() != "cpu"
+    return jax.jit(round_step, donate_argnums=(0,) if donate else ())

@@ -8,6 +8,11 @@ SmartFreezeServer runs the full paper pipeline end to end:
       training -> Eq. 1 aggregation -> pace controller observes the block
       perturbation and freezes the stage when converged;
   (4) model growth until the full model is trained.
+
+Round execution is delegated to ``fl/engine.py``: one fused
+vmap-over-clients dispatch per round plus a frozen-prefix feature cache
+(declined per client via the memory-model hook below). The
+deadline/straggler path keeps the sequential ``fused=False`` escape hatch.
 """
 from __future__ import annotations
 
@@ -24,8 +29,11 @@ from repro.core.pace import PaceController
 from repro.core.selector import ParticipantSelector
 from repro.core.selector.similarity import similarity_matrix
 from repro.fl.client import SimClient
+from repro.fl.engine import RoundEngine, weighted_avg
 from repro.models.cnn import CNN
 from repro.optim import Optimizer, sgd
+
+_weighted_avg = weighted_avg  # baselines import this name
 
 
 @dataclass
@@ -39,9 +47,29 @@ class RoundResult:
     frozen: bool = False
 
 
+def cnn_feature_cache_bytes(model: CNN, stage: int, num_samples: int,
+                            image_size: int = 32) -> float:
+    """Bytes to hold a client shard's frozen-prefix activations (fp32):
+    the feature map at the stage boundary, one per local sample."""
+    if stage <= 0:
+        return 0.0
+    cfg = model.cfg
+    ch = cfg.stage_channels[stage - 1]
+    if cfg.kind == "vgg":  # maxpool halves after every stage
+        res = max(image_size // (2 ** stage), 1)
+    else:  # resnet: stride-2 at each stage entry except stage 0
+        res = max(image_size // (2 ** (stage - 1)), 1)
+    return float(num_samples) * res * res * ch * 4.0
+
+
 def cnn_stage_memory_bytes(model: CNN, stage: int, batch_size: int,
-                           image_size: int = 32) -> float:
-    """Eq. (4) for the CNN testbed (fp32)."""
+                           image_size: int = 32, *,
+                           cache_samples: int = 0) -> float:
+    """Eq. (4) for the CNN testbed (fp32). ``cache_samples`` is the feature
+    cache hook: when a client would additionally hold its shard's frozen-
+    prefix activations, the requirement grows by ``cnn_feature_cache_bytes``
+    — the selector/server uses this to decline the cache on memory-poor
+    clients (who fall back to recomputing the prefix)."""
     cfg = model.cfg
     res = image_size
     act = 0.0
@@ -58,7 +86,10 @@ def cnn_stage_memory_bytes(model: CNN, stage: int, batch_size: int,
         if i >= stage:
             break
     opt = params * 2.0  # momentum
-    return 2 * act + params + opt + max_act
+    total = 2 * act + params + opt + max_act
+    if cache_samples:
+        total += cnn_feature_cache_bytes(model, stage, cache_samples, image_size)
+    return total
 
 
 class SmartFreezeServer:
@@ -68,7 +99,8 @@ class SmartFreezeServer:
                  batch_size: int = 32, rounds_per_stage: int = 60,
                  pace_kwargs: Optional[dict] = None,
                  op_kind: str = "conv", selector: Optional[ParticipantSelector] = None,
-                 deadline_factor: float = 0.0, seed: int = 0):
+                 deadline_factor: float = 0.0, seed: int = 0,
+                 fused: bool = True, cache_features: bool = True):
         self.model = model
         self.clients = {c.client_id: c for c in clients}
         self.optimizer_fn = optimizer_fn
@@ -81,8 +113,11 @@ class SmartFreezeServer:
         self.selector = selector or ParticipantSelector(seed=seed)
         self.deadline_factor = deadline_factor  # >0: drop stragglers past deadline
         self.seed = seed
+        self.fused = fused
+        self.cache_features = cache_features
         self.history: List[RoundResult] = []
         self._last_loss: Dict[int, float] = {}
+        self.image_size = int(next(iter(self.clients.values())).data["x"].shape[1])
 
     # ----- bootstrap: similarity from output-layer gradients (Eq. 8) -----
 
@@ -105,6 +140,33 @@ class SmartFreezeServer:
                                          for l in jax.tree.leaves(g)])
         return similarity_matrix(grads)
 
+    # ----- per-stage engine construction -----
+
+    def _stage_engine(self, stage: int, frozen, bn_state) -> RoundEngine:
+        model = self.model
+        cached_loss = feature_fn = None
+        if stage > 0:
+            cached_loss = fz.cnn_cached_stage_loss_fn(model, stage,
+                                                      op_kind=self.op_kind)
+            feature_fn = (lambda x, _fr=frozen, _st=bn_state:
+                          fz.cnn_prefix_features(model, _fr, _st, x, stage))
+        return RoundEngine(
+            loss_fn=fz.cnn_stage_loss_fn(model, stage, op_kind=self.op_kind),
+            optimizer=self.optimizer_fn(), frozen=frozen,
+            cached_loss_fn=cached_loss, feature_fn=feature_fn,
+            batch_size=self.batch_size, local_epochs=self.local_epochs,
+            clip_norm=10.0, fused=self.fused)
+
+    def _cache_plan(self, stage: int) -> Dict[int, bool]:
+        """Memory-model gate: cache only on clients whose capacity covers the
+        stage requirement PLUS their shard's prefix activations."""
+        if not self.cache_features or stage == 0:
+            return {}
+        return {cid: c.memory_bytes >= cnn_stage_memory_bytes(
+                    self.model, stage, self.batch_size, self.image_size,
+                    cache_samples=c.num_samples)
+                for cid, c in self.clients.items()}
+
     # ----- main loop -----
 
     def run(self, params, state, *, eval_fn: Optional[Callable] = None,
@@ -115,7 +177,6 @@ class SmartFreezeServer:
         n_stages = len(model.cfg.stage_sizes)
         sim = self.bootstrap_similarity(params, state)
         self.selector.fit_communities(sim)
-        rng = np.random.RandomState(self.seed)
         round_idx = 0
         budget = total_rounds or self.rounds_per_stage * n_stages
 
@@ -131,9 +192,10 @@ class SmartFreezeServer:
             frozen, active = fz.init_cnn_stage_active(
                 model, params, stage, jax.random.PRNGKey(self.seed + stage),
                 op_kind=self.op_kind)
-            opt = self.optimizer_fn()
-            step_fn = fz.make_cnn_stage_step(model, stage, opt, op_kind=self.op_kind)
-            mem_req = cnn_stage_memory_bytes(model, stage, self.batch_size)
+            engine = self._stage_engine(stage, frozen, state)
+            cache_ok = self._cache_plan(stage)
+            mem_req = cnn_stage_memory_bytes(model, stage, self.batch_size,
+                                             self.image_size)
 
             for r in range(plan_rounds):
                 if round_idx >= budget:
@@ -147,30 +209,21 @@ class SmartFreezeServer:
                 selected = self.selector.select(infos, self.k,
                                                 mem_required=mem_req,
                                                 stage_time_fn=time_fn)
-                # --- deadline-based straggler mitigation ---
+                # --- deadline-based straggler mitigation (sequential path) ---
+                straggler_round = False
                 if self.deadline_factor > 0 and len(selected) > 2:
+                    straggler_round = True
                     times = {cid: time_fn(infos[cid]) for cid in selected}
                     deadline = np.median(list(times.values())) * self.deadline_factor
                     kept = [cid for cid in selected if times[cid] <= deadline]
                     if len(kept) >= max(2, len(selected) // 2):
                         selected = kept
-                # --- local training ---
-                updates, weights, losses = [], [], {}
-                for cid in selected:
-                    c = self.clients[cid]
-                    a_i, s_i, loss_i, _ = c.local_train(
-                        step_fn, active, frozen, state, opt.init(active),
-                        batch_size=self.batch_size, epochs=self.local_epochs,
-                        round_idx=round_idx)
-                    updates.append((a_i, s_i))
-                    weights.append(c.num_samples)
-                    losses[cid] = loss_i
+                # --- local training + Eq. 1 aggregation (fused dispatch) ---
+                active, state, losses = engine.run_round(
+                    self.clients, selected, active, state, round_idx,
+                    use_cache=cache_ok,
+                    sequential=True if straggler_round else None)
                 self._last_loss.update(losses)
-                # --- Eq. 1 aggregation ---
-                w = np.asarray(weights, np.float64)
-                w = w / w.sum()
-                active = _weighted_avg([u[0] for u in updates], w)
-                state = _weighted_avg([u[1] for u in updates], w)
                 # --- pace controller ---
                 p = pace.observe(active.get("stages", active))
                 do_freeze = pace.should_freeze() and schedule is None
@@ -196,7 +249,7 @@ class FedAvgServer:
     def __init__(self, model: CNN, clients: List[SimClient], *,
                  optimizer_fn=lambda: sgd(0.05), clients_per_round: int = 10,
                  local_epochs: int = 1, batch_size: int = 32,
-                 mem_required: float = 0.0, seed: int = 0):
+                 mem_required: float = 0.0, seed: int = 0, fused: bool = True):
         self.model = model
         self.clients = {c.client_id: c for c in clients}
         self.optimizer_fn = optimizer_fn
@@ -205,26 +258,20 @@ class FedAvgServer:
         self.batch_size = batch_size
         self.mem_required = mem_required
         self.seed = seed
+        self.fused = fused
         self.history: List[RoundResult] = []
 
     def run(self, params, state, *, rounds: int, eval_fn=None, eval_every=10):
         model = self.model
         n_stages = len(model.cfg.stage_sizes)
-        # "stage" = last stage trained jointly with everything: use full fwd
-        opt = self.optimizer_fn()
 
-        def full_loss(p, st, batch):
+        def full_loss(p, frozen_unused, st, batch):
             return model.loss(p, st, batch, train=True)
 
-        @jax.jit
-        def step_fn(p, frozen_unused, st, opt_state, batch):
-            (loss, new_st), grads = jax.value_and_grad(full_loss, has_aux=True)(
-                p, st, batch)
-            from repro.optim import apply_updates, clip_by_global_norm
-            grads, _ = clip_by_global_norm(grads, 10.0)
-            ups, opt_state = opt.update(grads, opt_state, p)
-            return apply_updates(p, ups), new_st, opt_state, loss
-
+        engine = RoundEngine(loss_fn=full_loss, optimizer=self.optimizer_fn(),
+                             batch_size=self.batch_size,
+                             local_epochs=self.local_epochs,
+                             clip_norm=10.0, fused=self.fused)
         rng = np.random.RandomState(self.seed)
         eligible = [cid for cid, c in self.clients.items()
                     if c.memory_bytes >= self.mem_required]
@@ -233,33 +280,12 @@ class FedAvgServer:
                 break
             sel = list(rng.choice(eligible, size=min(self.k, len(eligible)),
                                   replace=False))
-            updates, weights, losses = [], [], []
-            for cid in sel:
-                c = self.clients[cid]
-                p_i, s_i, loss_i, _ = c.local_train(
-                    step_fn, params, None, state, opt.init(params),
-                    batch_size=self.batch_size, epochs=self.local_epochs,
-                    round_idx=r)
-                updates.append((p_i, s_i))
-                weights.append(c.num_samples)
-                losses.append(loss_i)
-            w = np.asarray(weights, np.float64)
-            w /= w.sum()
-            params = _weighted_avg([u[0] for u in updates], w)
-            state = _weighted_avg([u[1] for u in updates], w)
-            rr = RoundResult(r, n_stages - 1, float(np.mean(losses)), selected=sel)
+            params, state, losses = engine.run_round(
+                self.clients, sel, params, state, r)
+            rr = RoundResult(r, n_stages - 1,
+                             float(np.mean(list(losses.values()))), selected=sel)
             if eval_fn is not None and r % eval_every == 0:
                 rr.test_acc = eval_fn(params, state, n_stages - 1)
             self.history.append(rr)
         return {"params": params, "state": state, "history": self.history,
                 "participation": len(eligible) / len(self.clients)}
-
-
-def _weighted_avg(trees: List, w: np.ndarray):
-    out = trees[0]
-    out = jax.tree.map(lambda x: x.astype(jnp.float32) * float(w[0]), out)
-    for t, wi in zip(trees[1:], w[1:]):
-        out = jax.tree.map(lambda a, x: a + x.astype(jnp.float32) * float(wi),
-                           out, t)
-    ref = trees[0]
-    return jax.tree.map(lambda a, r: a.astype(r.dtype), out, ref)

@@ -133,7 +133,8 @@ def _multipliers(comps: Dict[str, List[str]]) -> Dict[str, int]:
 
 
 _INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)\(")
-_DOT_OPERANDS_RE = re.compile(r"\bdot\(\s*%?([\w\.\-]+)")
+_DOT_LHS_RE = re.compile(
+    r"\bdot\(\s*(?:([a-z0-9]+\[[0-9,]*\])(?:\{[^}]*\})?\s+)?%?([\w\.\-]+)")
 _LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 
 
@@ -156,11 +157,15 @@ def _dot_flops(line: str, table: Dict[str, str]) -> int:
     if not m or m.group(3) != "dot":
         return 0
     out = _shape_dims(m.group(2))
-    om = _DOT_OPERANDS_RE.search(line)
+    om = _DOT_LHS_RE.search(line)
     if out is None or om is None:
         return 0
-    lhs_shape = table.get(om.group(1))
-    lhs = _shape_dims(lhs_shape) if lhs_shape else None
+    # newer XLA prints operand shapes inline: dot(f32[128,256]{1,0} %a, ...)
+    if om.group(1):
+        lhs = _shape_dims(om.group(1))
+    else:  # older format: bare operand name, resolve via table
+        lhs_shape = table.get(om.group(2))
+        lhs = _shape_dims(lhs_shape) if lhs_shape else None
     cm = _LHS_CONTRACT_RE.search(line)
     contract = 1
     if lhs is not None and cm and cm.group(1):
@@ -241,6 +246,15 @@ def hlo_weighted_costs(hlo: str) -> Dict[str, float]:
             "collective_by_op": coll_by_op}
 
 
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` normalized to a flat dict: newer jaxlibs
+    return the dict directly, older ones a one-element list of dicts."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def collective_bytes(hlo: str) -> Tuple[int, Dict[str, int]]:
     out = hlo_weighted_costs(hlo)
     return int(out["collective_bytes"]), {k: int(v) for k, v in
@@ -256,7 +270,7 @@ def analyze_compiled(compiled, mesh, cfg, shape) -> Dict:
     from repro.core.memory_model import model_flops_6nd
 
     n_chips = mesh.size
-    cost = compiled.cost_analysis() or {}
+    cost = cost_analysis_dict(compiled)
     hlo = compiled.as_text()
     w = hlo_weighted_costs(hlo)
 

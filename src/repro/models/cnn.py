@@ -31,6 +31,12 @@ class CNNConfig:
     stage_channels: Tuple[int, ...] = (64, 128, 256, 512)
     in_channels: int = 3
     num_freeze_blocks: int = 4
+    # BN running-stat momentum. 0.6, not torch's 0.9-equivalent: federated
+    # rounds run only a handful of minibatches per client before Eq. 1
+    # aggregation, and stats anchored at their (0, 1) init leave the
+    # eval-mode forward degenerate for the whole short-horizon simulation.
+    # Long centralized runs are insensitive to this choice.
+    bn_momentum: float = 0.6
 
     def block_boundaries(self) -> Tuple[int, ...]:
         """SmartFreeze blocks == network stages (paper: ResNet-18 -> 4 blocks)."""
@@ -46,6 +52,15 @@ VGG16 = CNNConfig("vgg16_bn", "vgg", stage_sizes=(2, 2, 3, 3, 3),
                   stage_channels=(64, 128, 256, 512, 512))
 
 CNN_REGISTRY = {c.name: c for c in (RESNET10, RESNET18, VGG11, VGG16)}
+
+
+def softmax_xent(logits: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Mean softmax cross-entropy in fp32 — THE loss of the CNN testbed
+    (model, stage trainers, and every baseline share this one copy)."""
+    lf = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, y[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
 
 
 # ---------------------------------------------------------------------------
@@ -66,17 +81,21 @@ def _basic_block_init(fac: PFac, c_in: int, c_out: int) -> Tuple[Params, Params]
     return p, s
 
 
-def _basic_block(p: Params, s: Params, x: jnp.ndarray, stride: int, *, train: bool
+def _basic_block(p: Params, s: Params, x: jnp.ndarray, stride: int, *,
+                 train: bool, momentum: float = 0.6
                  ) -> Tuple[jnp.ndarray, Params]:
     ns: Params = {}
     h = conv2d(p["conv1"], x, stride=stride)
-    h, ns["bn1"] = batchnorm(p["bn1"], s["bn1"], h, train=train)
+    h, ns["bn1"] = batchnorm(p["bn1"], s["bn1"], h, train=train,
+                             momentum=momentum)
     h = jax.nn.relu(h)
     h = conv2d(p["conv2"], h)
-    h, ns["bn2"] = batchnorm(p["bn2"], s["bn2"], h, train=train)
+    h, ns["bn2"] = batchnorm(p["bn2"], s["bn2"], h, train=train,
+                             momentum=momentum)
     if "proj" in p:
         sc = conv2d(p["proj"], x, stride=stride)
-        sc, ns["bn_proj"] = batchnorm(p["bn_proj"], s["bn_proj"], sc, train=train)
+        sc, ns["bn_proj"] = batchnorm(p["bn_proj"], s["bn_proj"], sc,
+                                      train=train, momentum=momentum)
     else:
         sc = x if stride == 1 else x[:, ::stride, ::stride, :]
     return jax.nn.relu(h + sc), ns
@@ -135,7 +154,8 @@ class CNN:
         if self.cfg.kind != "resnet":
             return x, state
         h = conv2d(params["stem"]["conv"], x)
-        h, bn = batchnorm(params["stem"]["bn"], state["stem_bn"], h, train=train)
+        h, bn = batchnorm(params["stem"]["bn"], state["stem_bn"], h,
+                          train=train, momentum=self.cfg.bn_momentum)
         new_state = dict(state)
         new_state["stem_bn"] = bn
         return jax.nn.relu(h), new_state
@@ -153,10 +173,12 @@ class CNN:
                 bp, bs = blocks[f"b{j}"], bstates[f"b{j}"]
                 if cfg.kind == "resnet":
                     stride = 2 if (j == 0 and i > 0) else 1
-                    h, ns = _basic_block(bp, bs, h, stride, train=train)
+                    h, ns = _basic_block(bp, bs, h, stride, train=train,
+                                         momentum=cfg.bn_momentum)
                 else:
                     h = conv2d(bp["conv"], h)
-                    h, bn = batchnorm(bp["bn"], bs["bn"], h, train=train)
+                    h, bn = batchnorm(bp["bn"], bs["bn"], h, train=train,
+                                      momentum=cfg.bn_momentum)
                     h = jax.nn.relu(h)
                     ns = {"bn": bn}
                 nbs[f"b{j}"] = ns
@@ -180,10 +202,7 @@ class CNN:
 
     def loss(self, params: Params, state: Params, batch: Dict, *, train: bool = True):
         logits, new_state = self.apply(params, state, batch["x"], train=train)
-        lf = logits.astype(jnp.float32)
-        logz = jax.scipy.special.logsumexp(lf, axis=-1)
-        gold = jnp.take_along_axis(lf, batch["y"][:, None], axis=-1)[:, 0]
-        return jnp.mean(logz - gold), new_state
+        return softmax_xent(logits, batch["y"]), new_state
 
     def stage_output_channels(self, stage: int) -> int:
         return self.cfg.stage_channels[stage]

@@ -1,0 +1,257 @@
+"""Round-engine invariants: cached-feature training == full recompute on
+both freezing backends, fused vmapped rounds == the sequential per-client
+loop for fixed seeds, and the memory-model cache hook gates who caches."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import freezing
+from repro.core import freezing_cnn as fz
+from repro.data.partition import dirichlet_partition
+from repro.data.synthetic import SyntheticVision, make_lm_batch
+from repro.fl.client import make_client_fleet
+from repro.fl.engine import RoundEngine, make_lm_cached_fed_round_step
+from repro.fl.server import SmartFreezeServer, cnn_stage_memory_bytes
+from repro.models.cnn import CNN, CNNConfig
+from repro.models.transformer import build
+from repro.optim import sgd
+
+TINY = CNNConfig("tiny_resnet", "resnet", stage_sizes=(1, 1),
+                 stage_channels=(8, 16), num_classes=4)
+LM_CFG = configs.get("llama3-8b").reduced(num_layers=4, num_freeze_blocks=2)
+
+
+def _cnn_world(n_clients=6, n=600):
+    sv = SyntheticVision(num_classes=4, image_size=16, seed=0)
+    train = sv.sample(n, seed=1)
+    parts = dirichlet_partition(train["y"], n_clients, alpha=1.0, seed=0)
+    clients = make_client_fleet(train, parts, scenario="low", seed=0)
+    model = CNN(TINY)
+    params, state = model.init(jax.random.PRNGKey(0))
+    return train, clients, model, params, state
+
+
+def _tree_allclose(a, b, rtol=2e-4, atol=2e-4):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32),
+                                   rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# cached features vs full recompute: logits equivalence
+# ---------------------------------------------------------------------------
+
+
+def test_cnn_cached_logits_match_recompute():
+    train, clients, model, params, state = _cnn_world()
+    stage = 1
+    frozen, active = fz.init_cnn_stage_active(model, params, stage,
+                                              jax.random.PRNGKey(1))
+    x = jnp.asarray(train["x"][:32])
+    full = jax.jit(lambda a, f, s, xx: fz.cnn_stage_forward(
+        model, f, a, s, xx, stage))
+    feats = jax.jit(lambda f, s, xx: fz.cnn_prefix_features(
+        model, f, s, xx, stage))(frozen, state, x)
+    cached = jax.jit(lambda a, s, h: fz.cnn_stage_forward_from_features(
+        model, a, s, h, stage))
+    l_full, _ = full(active, frozen, state, x)
+    l_cached, _ = cached(active, state, feats)
+    np.testing.assert_allclose(np.asarray(l_cached, np.float32),
+                               np.asarray(l_full, np.float32),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_lm_cached_logits_match_recompute():
+    model = build(LM_CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    plan = freezing.make_stage_plan(LM_CFG, 1)
+    assert freezing.prefix_is_static(plan)
+    frozen, active = freezing.init_stage_active(model, params, plan,
+                                                jax.random.PRNGKey(1))
+    batch = {k: jnp.asarray(v) for k, v in make_lm_batch(LM_CFG, 2, 32).items()}
+
+    def full_logits(a, f, b):
+        h, w, _ = freezing.stage_forward(model, f, a, b, plan, remat=False)
+        return h @ w.astype(h.dtype)
+
+    def cached_logits(a, h0, aux0):
+        h, w, _ = freezing.stage_forward_from_features(model, a, h0, aux0,
+                                                       plan, remat=False)
+        return h @ w.astype(h.dtype)
+
+    h0, aux0 = jax.jit(lambda f, a, b: freezing.stage_prefix_features(
+        model, f, a, b, plan))(frozen, active, batch)
+    lf = jax.jit(full_logits)(active, frozen, batch)
+    lc = jax.jit(cached_logits)(active, h0, aux0)
+    np.testing.assert_allclose(np.asarray(lc, np.float32),
+                               np.asarray(lf, np.float32),
+                               rtol=2e-2, atol=2e-2)  # bf16 compute
+
+
+def test_lm_cached_round_rejects_non_static_prefix():
+    import pytest
+
+    model = build(LM_CFG)
+    plan0 = freezing.make_stage_plan(LM_CFG, 0)  # embedding trains
+    with pytest.raises(ValueError, match="not a fixed feature extractor"):
+        make_lm_cached_fed_round_step(model, plan0, sgd(0.05),
+                                      num_pods=1, local_steps=1)
+
+
+def test_prefix_static_detection():
+    # stage 0 trains the embedding: features move every step
+    assert not freezing.prefix_is_static(freezing.make_stage_plan(LM_CFG, 0))
+    assert freezing.prefix_is_static(freezing.make_stage_plan(LM_CFG, 1))
+    # zamba2: weight-tied shared attention in the prefix keeps training
+    zcfg = configs.get("zamba2-7b").reduced(num_layers=4, num_freeze_blocks=2)
+    zplan = freezing.make_stage_plan(zcfg, 1)
+    assert any(k == "shared_attn" for _, k, *_ in zplan.runs)
+    assert not freezing.prefix_is_static(zplan)
+
+
+# ---------------------------------------------------------------------------
+# fused vmapped round vs sequential per-client loop
+# ---------------------------------------------------------------------------
+
+
+def _stage_engine(model, stage, frozen, state, *, fused):
+    cached_loss = feature_fn = None
+    if stage > 0:
+        cached_loss = fz.cnn_cached_stage_loss_fn(model, stage)
+        feature_fn = lambda x: fz.cnn_prefix_features(model, frozen, state, x,
+                                                      stage)
+    return RoundEngine(loss_fn=fz.cnn_stage_loss_fn(model, stage),
+                       optimizer=sgd(0.05), frozen=frozen,
+                       cached_loss_fn=cached_loss, feature_fn=feature_fn,
+                       batch_size=32, local_epochs=1, fused=fused)
+
+
+def test_fused_round_matches_sequential():
+    train, clients, model, params, state = _cnn_world()
+    by_id = {c.client_id: c for c in clients}
+    stage = 0
+    frozen, active = fz.init_cnn_stage_active(model, params, stage,
+                                              jax.random.PRNGKey(1))
+    sel = [c.client_id for c in clients[:4]]  # unequal shard sizes
+    a_f, s_f, l_f = _stage_engine(model, stage, frozen, state, fused=True) \
+        .run_round(by_id, sel, active, state, 3)
+    a_s, s_s, l_s = _stage_engine(model, stage, frozen, state, fused=False) \
+        .run_round(by_id, sel, active, state, 3)
+    _tree_allclose(a_f, a_s)
+    _tree_allclose(s_f, s_s)
+    for cid in sel:
+        assert abs(l_f[cid] - l_s[cid]) < 1e-3, (cid, l_f[cid], l_s[cid])
+
+
+def test_cached_round_matches_recompute_round():
+    train, clients, model, params, state = _cnn_world()
+    by_id = {c.client_id: c for c in clients}
+    stage = 1
+    frozen, active = fz.init_cnn_stage_active(model, params, stage,
+                                              jax.random.PRNGKey(1))
+    sel = [c.client_id for c in clients[:4]]
+    eng = lambda: _stage_engine(model, stage, frozen, state, fused=True)
+    a_r, s_r, _ = eng().run_round(by_id, sel, active, state, 0, use_cache={})
+    a_c, s_c, _ = eng().run_round(by_id, sel, active, state, 0,
+                                  use_cache={cid: True for cid in sel})
+    _tree_allclose(a_c, a_r)
+    _tree_allclose(s_c, s_r)
+
+
+def test_mixed_cache_cohort_matches_uniform():
+    """Half the cohort on cached features, half on recompute — the grouped
+    aggregation must equal the flat-cohort result."""
+    train, clients, model, params, state = _cnn_world()
+    by_id = {c.client_id: c for c in clients}
+    stage = 1
+    frozen, active = fz.init_cnn_stage_active(model, params, stage,
+                                              jax.random.PRNGKey(1))
+    sel = [c.client_id for c in clients[:4]]
+    eng = lambda: _stage_engine(model, stage, frozen, state, fused=True)
+    a_u, s_u, _ = eng().run_round(by_id, sel, active, state, 0, use_cache={})
+    a_m, s_m, _ = eng().run_round(by_id, sel, active, state, 0,
+                                  use_cache={sel[0]: True, sel[2]: True})
+    _tree_allclose(a_m, a_u)
+    _tree_allclose(s_m, s_u)
+
+
+# ---------------------------------------------------------------------------
+# LM backend: cached fed round vs recompute fed round
+# ---------------------------------------------------------------------------
+
+
+def test_lm_cached_fed_round_matches_recompute():
+    model = build(LM_CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    plan = freezing.make_stage_plan(LM_CFG, 1)
+    frozen, active = freezing.init_stage_active(model, params, plan,
+                                                jax.random.PRNGKey(1))
+    num_pods, K = 2, 2
+    b = make_lm_batch(LM_CFG, 2, 32)
+    batch = {k: jnp.asarray(np.stack([np.stack([v] * K)] * num_pods))
+             for k, v in b.items()}
+    w = jnp.asarray([1.0, 3.0])
+
+    rstep = freezing.make_fed_round_step(model, plan, sgd(0.05),
+                                         num_pods=num_pods, local_steps=K,
+                                         remat=False)
+    ref_active, ref_m = jax.jit(rstep)(active, frozen, batch, w)
+
+    # precompute prefix features for every (pod, step) minibatch
+    pf = jax.jit(lambda f, a, bb: freezing.stage_prefix_features(
+        model, f, a, bb, plan))
+    h0 = []
+    aux0 = []
+    for p in range(num_pods):
+        hs, auxs = [], []
+        for k in range(K):
+            hh, aa = pf(frozen, active, {kk: vv[p, k] for kk, vv in batch.items()})
+            hs.append(hh)
+            auxs.append(aa)
+        h0.append(jnp.stack(hs))
+        aux0.append(jnp.stack(auxs))
+    cbatch = dict(batch)
+    cbatch["h0"] = jnp.stack(h0)
+    cbatch["aux0"] = jnp.stack(aux0)
+    cstep = make_lm_cached_fed_round_step(model, plan, sgd(0.05),
+                                          num_pods=num_pods, local_steps=K,
+                                          remat=False, donate=False)
+    got_active, got_m = cstep(active, cbatch, w)
+    _tree_allclose(got_active, ref_active, rtol=2e-2, atol=2e-2)  # bf16
+    np.testing.assert_allclose(float(got_m["loss"]), float(ref_m["loss"]),
+                               rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# memory-model hook: the selector declines the cache on memory-poor clients
+# ---------------------------------------------------------------------------
+
+
+def test_memory_hook_cache_monotone():
+    model = CNN(TINY)
+    base = cnn_stage_memory_bytes(model, 1, 32, 16)
+    with_cache = cnn_stage_memory_bytes(model, 1, 32, 16, cache_samples=500)
+    assert with_cache > base
+    from repro.core.memory_model import stage_memory_bytes
+    lm_base = stage_memory_bytes(LM_CFG, 1, batch=2, seq=32)["total"]
+    lm_cache = stage_memory_bytes(LM_CFG, 1, batch=2, seq=32,
+                                  cache_tokens=10_000)
+    assert lm_cache["total"] > lm_base
+    assert lm_cache["feature_cache"] > 0
+
+
+def test_server_declines_cache_on_memory_poor_clients():
+    train, clients, model, params, state = _cnn_world()
+    # one client barely fits the stage but NOT the cache
+    model_req = cnn_stage_memory_bytes(model, 1, 32, 16)
+    clients[0].memory_bytes = model_req + 1.0
+    clients[1].memory_bytes = 64 * 2**30
+    srv = SmartFreezeServer(model, clients, clients_per_round=4, batch_size=32)
+    plan = srv._cache_plan(1)
+    assert plan[clients[0].client_id] is np.False_ or not plan[clients[0].client_id]
+    assert plan[clients[1].client_id]
+    assert srv._cache_plan(0) == {}  # stage 0 has no frozen prefix

@@ -8,8 +8,9 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.launch.roofline import (collective_bytes, hlo_weighted_costs,
-                                   _parse_computations, _multipliers)
+from repro.launch.roofline import (collective_bytes, cost_analysis_dict,
+                                   hlo_weighted_costs, _parse_computations,
+                                   _multipliers)
 
 
 def _compile(f, *specs):
@@ -28,7 +29,7 @@ def test_scan_flops_weighted_by_trip_count():
     w = hlo_weighted_costs(c.as_text())
     assert w["flops"] == 2 * 64 * 64 * 64 * 10
     # the raw cost_analysis under-reports (documented limitation)
-    raw = c.cost_analysis()["flops"]
+    raw = cost_analysis_dict(c)["flops"]
     assert raw < w["flops"] / 5
 
 
