@@ -13,6 +13,10 @@ communities) are what reproduce the paper's tables.
   kernels_microbench       Pallas kernels (interpret) vs jnp oracle timing
   round_engine             fused+cached round engine vs seed sequential path
                            (us/round per stage; emits BENCH_round_engine.json)
+  selector_scale           vectorized population selector vs list-based path
+                           (N up to 100k) + in-graph compressed fused round
+                           (emits BENCH_selector_scale.json; BENCH_SMOKE=1
+                           for the N=1k CI smoke)
 
 Run everything: ``python benchmarks/run.py``; or name a subset:
 ``python benchmarks/run.py round_engine fig10_memory``.
@@ -391,13 +395,183 @@ def round_engine(rounds=4):
          + f";cnn_allclose={cnn_ok};lm_allclose={lm_ok}")
 
 
+def selector_scale():
+    """Population-scale selection + in-graph compressed uplink (PR 2).
+
+    Part 1 — selector: N in {1k, 10k, 100k} synthetic clients with 64
+    planted communities. Times one ``select`` call (Eqs. 11-14 + community
+    round-robin) for (a) the list-based ``ParticipantSelector`` in its
+    server configuration (communities fitted — this path is quadratic in N
+    from the per-member ``set(elig)`` pool rebuild), (b) the same selector
+    with no communities (its fastest configuration), and (c) the
+    ``VectorizedSelector`` over a device-resident ``ClientPopulation``.
+    Cross-checks vectorized == list picks at N=1k with epsilon=0 first.
+
+    Part 2 — compressed round: fused CNN round at ratio {dense, 0.1, 1.0};
+    ratio=1.0 must be allclose to the dense Eq. 1 aggregate, ratio=0.1
+    should stay within ~1.2x of the dense round's wall clock (the top-k +
+    scatter adds run inside the same dispatch).
+
+    Writes benchmarks/BENCH_selector_scale.json. BENCH_SMOKE=1 limits to
+    N=1k and one timed round (the CI smoke configuration).
+    """
+    import jax, jax.numpy as jnp
+    from repro.core.selector import (ClientInfo, ClientPopulation,
+                                     ParticipantSelector, VectorizedSelector)
+    from repro.data.partition import iid_partition
+    from repro.data.synthetic import SyntheticVision
+    from repro.fl.client import make_client_fleet
+    from repro.fl.engine import RoundEngine
+    from repro.models.cnn import CNN, CNNConfig
+    from repro.optim import sgd
+
+    smoke = bool(int(os.environ.get("BENCH_SMOKE", "0")))
+    ns = (1000,) if smoke else (1000, 10_000, 100_000)
+    k, n_comm = 64, 64
+    time_fn = lambda ci: ci.num_samples / ci.capability
+
+    def build(n, seed=0):
+        rng = np.random.RandomState(seed)
+        mem = rng.choice([1.0, 2.0, 4.0, 8.0], size=n) * 2**30
+        cap = rng.choice([1e9, 2.5e9, 5e9], size=n)
+        samp = rng.randint(32, 512, size=n)
+        loss = rng.rand(n).astype(np.float64)
+        comm = rng.randint(0, n_comm, size=n)
+        infos = {i: ClientInfo(i, float(mem[i]), float(cap[i]), int(samp[i]),
+                               float(loss[i])) for i in range(n)}
+        communities = [np.flatnonzero(comm == c).tolist()
+                       for c in range(n_comm)]
+        pop = ClientPopulation.from_infos(infos, community_id=comm,
+                                          n_communities=n_comm)
+        return infos, communities, pop
+
+    # --- correctness cross-check (epsilon=0 -> identical picks) ---
+    infos, communities, pop = build(1000)
+    ls = ParticipantSelector(epsilon=0.0, seed=7)
+    ls._communities = communities
+    vs = VectorizedSelector(epsilon=0.0, seed=7)
+    vs._communities = communities
+    picks_equal = all(
+        ls.select(infos, k, mem_required=1.5 * 2**30, stage_time_fn=time_fn)
+        == vs.select(infos, k, mem_required=1.5 * 2**30, stage_time_fn=time_fn)
+        for _ in range(3))
+
+    def timeit_rounds(fn, rounds):
+        fn(0)  # warmup (jit compile / first-touch)
+        t0 = time.time()
+        for r in range(1, rounds + 1):
+            fn(r)
+        return (time.time() - t0) / rounds * 1e6
+
+    rows = []
+    for n in ns:
+        infos, communities, pop = build(n)
+        mem_req = 1.5 * 2**30
+        sel_v = VectorizedSelector(epsilon=0.2, seed=0)
+        v_us = timeit_rounds(
+            lambda r: sel_v.select_arrays(pop, k, mem_required=mem_req,
+                                          round_idx=r), 1 if smoke else 5)
+        sel_nc = ParticipantSelector(epsilon=0.2, seed=0)
+        nc_us = timeit_rounds(
+            lambda r: sel_nc.select(infos, k, mem_required=mem_req,
+                                    stage_time_fn=time_fn),
+            1 if smoke else 3)
+        sel_c = ParticipantSelector(epsilon=0.2, seed=0)
+        sel_c._communities = communities
+        c_rounds = 1 if (smoke or n >= 100_000) else 2
+        c_us = timeit_rounds(
+            lambda r: sel_c.select(infos, k, mem_required=mem_req,
+                                   stage_time_fn=time_fn), c_rounds)
+        rows.append({
+            "n": n, "k": k, "n_communities": n_comm,
+            "vectorized_us": v_us,
+            "list_no_communities_us": nc_us,
+            "list_with_communities_us": c_us,
+            "speedup_vs_list": c_us / v_us,
+            "speedup_vs_list_no_communities": nc_us / v_us,
+        })
+
+    # --- fused compressed round vs dense ---
+    sv = SyntheticVision(num_classes=8, image_size=16)
+    train = sv.sample(384, seed=1)
+    parts = iid_partition(train["y"], 6, seed=0)
+    fleet = make_client_fleet(train, parts, scenario="low", seed=0)
+    by_id = {c.client_id: c for c in fleet}
+    sel = [c.client_id for c in fleet]
+    cfg = CNNConfig("rn", "resnet", stage_sizes=(1, 1),
+                    stage_channels=(12, 24), num_classes=8)
+    model = CNN(cfg)
+    params, state = model.init(jax.random.PRNGKey(0))
+
+    def full_loss(p, frozen_unused, st, batch):
+        return model.loss(p, st, batch, train=True)
+
+    def round_us(ratio, rounds):
+        eng = RoundEngine(loss_fn=full_loss, optimizer=sgd(0.05),
+                          batch_size=16, local_epochs=1,
+                          compress_ratio=ratio)
+        a, st = eng.run_round(by_id, sel, params, state, 0)[:2]  # warmup
+        t0 = time.time()
+        for r in range(1, rounds + 1):
+            a, st, _ = eng.run_round(by_id, sel, a, st, r)
+        jax.tree.leaves(a)[0].block_until_ready()
+        return (time.time() - t0) / rounds * 1e6, eng
+
+    rnds = 1 if smoke else 4
+    dense_us, eng_d = round_us(None, rnds)
+    c01_us, eng_c = round_us(0.1, rnds)
+    c1_us, _ = round_us(1.0, rnds)
+    # ratio=1.0 == dense Eq. 1 aggregate (one fresh round, same start state)
+    e1 = RoundEngine(loss_fn=full_loss, optimizer=sgd(0.05), batch_size=16,
+                     local_epochs=1, compress_ratio=1.0)
+    e0 = RoundEngine(loss_fn=full_loss, optimizer=sgd(0.05), batch_size=16,
+                     local_epochs=1)
+    p1 = e1.run_round(by_id, sel, params, state, 0)[0]
+    p0 = e0.run_round(by_id, sel, params, state, 0)[0]
+    ratio1_ok = all(np.allclose(np.asarray(a, np.float32),
+                                np.asarray(b, np.float32),
+                                rtol=2e-4, atol=2e-4)
+                    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p0)))
+
+    out = {
+        "smoke": smoke, "picks_equal_eps0": bool(picks_equal),
+        "selector": rows,
+        "compressed_round": {
+            "clients": len(sel), "dense_us": dense_us,
+            "ratio0.1_us": c01_us, "ratio1.0_us": c1_us,
+            "overhead_at_0.1": c01_us / dense_us,
+            "ratio1_allclose_dense": bool(ratio1_ok),
+            "uplink_bytes_dense": eng_d.last_uplink_bytes,
+            "uplink_bytes_0.1": eng_c.last_uplink_bytes,
+        },
+    }
+    path = os.path.join(os.path.dirname(__file__),
+                        "BENCH_selector_scale.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    # correctness flags gate the (CI smoke) run — timings are reported, not
+    # asserted, but the equivalence contracts must hold
+    assert picks_equal, "vectorized selector diverged from the list path"
+    assert ratio1_ok, "compressed round at ratio=1.0 != dense Eq. 1"
+    last = rows[-1]
+    _row("selector_scale", last["vectorized_us"],
+         ";".join(f"N={r['n']}:list={r['list_with_communities_us']:.0f}us;"
+                  f"list_nc={r['list_no_communities_us']:.0f}us;"
+                  f"vec={r['vectorized_us']:.0f}us;"
+                  f"speedup={r['speedup_vs_list']:.0f}x" for r in rows)
+         + f";picks_equal_eps0={picks_equal}"
+         + f";compress_overhead@0.1={c01_us / dense_us:.2f}x"
+         + f";ratio1_allclose={ratio1_ok}")
+
+
 BENCHES = {}
 
 
 def main() -> None:
     BENCHES.update({f.__name__: f for f in (
         fig10_memory, speedup_time_model, fig9_rlcd, fig2_layer_convergence,
-        kernels_microbench, round_engine, tab2_pace_ablation, tab1_fl_accuracy)})
+        kernels_microbench, round_engine, tab2_pace_ablation, tab1_fl_accuracy,
+        selector_scale)})
     names = sys.argv[1:] or list(BENCHES)
     unknown = [n for n in names if n not in BENCHES]
     if unknown:

@@ -1,5 +1,10 @@
-from repro.core.selector.similarity import output_layer_gradient, similarity_matrix
+from repro.core.selector.similarity import (label_sketches, output_layer_gradient,
+                                            similarity_matrix, sketch_projection,
+                                            topm_neighbors)
 from repro.core.selector.louvain import louvain
-from repro.core.selector.rlcd import rlcd_communities
-from repro.core.selector.bandit import UtilBandit
+from repro.core.selector.rlcd import (label_propagation, rlcd_communities,
+                                      sketch_communities)
+from repro.core.selector.bandit import UtilBandit, mix_seed
 from repro.core.selector.selection import ParticipantSelector, ClientInfo
+from repro.core.selector.vectorized import (ClientPopulation, VectorizedSelector,
+                                            population_from_selector)

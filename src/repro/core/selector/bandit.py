@@ -11,6 +11,16 @@ from typing import Dict, List, Sequence
 import numpy as np
 
 
+def mix_seed(seed: int, round_idx: int) -> int:
+    """Decorrelated per-round RNG seed. The old ``seed + round`` scheme made
+    (seed=0, round=1) and (seed=1, round=0) share a stream, so two selectors
+    with different seeds walked each other's exploration schedules one round
+    apart. Multiplying the seed onto a large odd constant separates the
+    streams; shared by UtilBandit, ParticipantSelector, and the vectorized
+    selector so the list and array paths stay pick-identical."""
+    return (seed * 1_000_003 + round_idx) % (2 ** 32)
+
+
 @dataclass
 class UtilBandit:
     epsilon: float = 0.2
@@ -28,7 +38,7 @@ class UtilBandit:
 
     def pick(self, candidates: Sequence[int], k: int) -> List[int]:
         """Pick k clients: (1-eps) exploit by Util, eps explore stalest."""
-        rng = np.random.RandomState(self.seed + self._round)
+        rng = np.random.RandomState(mix_seed(self.seed, self._round))
         cands = list(candidates)
         if len(cands) <= k:
             return cands

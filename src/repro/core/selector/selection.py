@@ -17,7 +17,7 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.selector.bandit import UtilBandit
+from repro.core.selector.bandit import UtilBandit, mix_seed
 from repro.core.selector.rlcd import rlcd_communities
 
 
@@ -83,7 +83,7 @@ class ParticipantSelector:
         chosen: List[int] = []
         pools = [[c for c in comm if c in set(elig)] for comm in self._communities]
         pools = [p for p in pools if p]
-        rng = np.random.RandomState(self.seed + self._bandit._round)
+        rng = np.random.RandomState(mix_seed(self.seed, self._bandit._round))
         order = rng.permutation(len(pools))
         ci = 0
         while len(chosen) < min(k, len(elig)) and pools:

@@ -1,13 +1,24 @@
-"""Client similarity from output-layer gradients (paper Eq. 8).
+"""Client similarity from output-layer gradients (paper Eq. 8) and its
+population-scale sketch approximation.
 
 Each client trains ONLY the global model's output layer for a few steps on
 local data and reports that gradient vector once (memory-cheap: no backprop
 through the body). Cosine similarity between these vectors tracks label
 distribution similarity — the basis for RL-CD community detection.
+
+The dense N x N ``similarity_matrix`` is the small-N oracle. At population
+scale the same signal is carried by each client's *label distribution*
+(which is what the output-layer gradient tracks): clients report a
+``sketch_dim``-sized count-sketch of their normalized label histogram, and
+similarity is evaluated lazily in row blocks (tiled jnp matmul + per-row
+``lax.top_k``) so only the top-m neighbor lists — O(N * m), not O(N^2) —
+ever materialize. Those neighbor lists feed the vectorized label
+propagation in rlcd.py.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict
+from functools import partial
+from typing import Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,3 +39,74 @@ def similarity_matrix(grads: Dict[int, np.ndarray]) -> np.ndarray:
     norms = np.linalg.norm(G, axis=1, keepdims=True)
     G = G / np.maximum(norms, 1e-12)
     return G @ G.T
+
+
+# ---------------------------------------------------------------------------
+# Hashed label-distribution sketches
+# ---------------------------------------------------------------------------
+
+
+def sketch_projection(num_classes: int, sketch_dim: int, seed: int = 0, *,
+                      n_hashes: int = 4) -> np.ndarray:
+    """Sparse signed hash projection [num_classes, sketch_dim]: each class
+    hashes to ``n_hashes`` signed buckets (sparse Johnson-Lindenstrauss),
+    so sketching is one sparse matmul and sketch cosine approximates
+    histogram cosine. A single hash (classic count-sketch) makes a bucket
+    collision between two classes catastrophic — their histograms become
+    fully (anti-)correlated; with ``n_hashes`` independent buckets the
+    distortion of any pair is averaged down by 1/n_hashes."""
+    rng = np.random.RandomState(seed)
+    P = np.zeros((num_classes, sketch_dim), np.float32)
+    for _ in range(n_hashes):
+        bucket = rng.randint(0, sketch_dim, size=num_classes)
+        sign = rng.choice(np.asarray([-1.0, 1.0], np.float32),
+                          size=num_classes)
+        P[np.arange(num_classes), bucket] += sign / np.sqrt(n_hashes)
+    return P
+
+
+def label_sketches(histograms: np.ndarray, projection: np.ndarray
+                   ) -> jnp.ndarray:
+    """[N, num_classes] label histograms -> [N, sketch_dim] device sketches
+    of the normalized label distributions."""
+    h = np.asarray(histograms, np.float32)
+    h = h / np.maximum(h.sum(axis=1, keepdims=True), 1.0)
+    return jnp.asarray(h) @ jnp.asarray(projection)
+
+
+@partial(jax.jit, static_argnames=("m",))
+def _block_topm(block, vecs_t, row_offset, *, m):
+    sims = block @ vecs_t                               # [B, N] tile
+    b = block.shape[0]
+    rows = jnp.arange(b)
+    sims = sims.at[rows, row_offset + rows].set(-jnp.inf)   # mask self
+    w, idx = jax.lax.top_k(sims, m)
+    return idx.astype(jnp.int32), w
+
+
+def topm_neighbors(vecs, m: int, *, block_rows: int = 4096,
+                   max_tile_bytes: int = 128 << 20
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-m cosine neighbors per row without materializing N x N: the
+    similarity matrix is computed one [block_rows, N] tile at a time and
+    immediately reduced by ``lax.top_k``. Returns ([N, m] neighbor indices,
+    [N, m] cosine weights); at most two block shapes are traced.
+
+    ``block_rows`` is a ceiling — the effective block shrinks so one f32
+    tile stays under ``max_tile_bytes`` (otherwise a 4096-row block at
+    N=100k would transiently allocate ~1.6 GB, defeating the O(N*m)
+    memory claim)."""
+    vecs = jnp.asarray(vecs, jnp.float32)
+    n = vecs.shape[0]
+    m = min(m, n - 1)
+    block_rows = max(1, min(block_rows, max_tile_bytes // max(4 * n, 1)))
+    norms = jnp.linalg.norm(vecs, axis=1, keepdims=True)
+    unit = vecs / jnp.maximum(norms, 1e-12)
+    unit_t = unit.T
+    idx_blocks, w_blocks = [], []
+    for lo in range(0, n, block_rows):
+        hi = min(lo + block_rows, n)
+        idx_b, w_b = _block_topm(unit[lo:hi], unit_t, jnp.int32(lo), m=m)
+        idx_blocks.append(idx_b)
+        w_blocks.append(w_b)
+    return jnp.concatenate(idx_blocks), jnp.concatenate(w_blocks)

@@ -1,0 +1,419 @@
+"""Population-scale participant selection as jitted array programs.
+
+The list-based ``ParticipantSelector`` (selection.py) walks Python lists and
+dicts per round — O(N) interpreter work plus an O(N^2) community/pool walk —
+which caps the simulator at a few thousand clients. This module re-implements
+the same per-stage policy (paper §IV-C, Eqs. 11-14) over a
+``ClientPopulation`` structure-of-arrays so the per-round control path is a
+handful of O(N) jitted kernels:
+
+  Eq. 12 memory filter      ``memory_bytes >= mem_required`` mask
+  Eq. 14 feasibility        masked ``sum`` of the eligibility mask
+  Eq. 11 utility            ``loss_sum - lam * stage_time`` (vectorized)
+  community coverage        per-community eligible counts via ``segment_sum``
+  within-community pick     gumbel-top-k: utility perturbed by Gumbel noise
+                            scaled by ``epsilon``; per-community maxima via
+                            ``segment_max`` + lowest-index ``segment_min``
+                            tie-break, one pass per round-robin sweep
+
+Round-robin coverage itself (which community contributes the next slot,
+including the list path's pool-exhaustion re-permutes) depends only on the
+per-community eligible COUNTS, never on which members win — so it runs as an
+O(C) host simulation sharing the exact ``numpy.random.RandomState`` stream
+of the list selector, while all O(N) member-level work stays on device.
+With ``epsilon=0`` the vectorized picks are identical to
+``ParticipantSelector`` (cross-checked in tests) up to float32 utility
+resolution: population arrays are f32, so two clients whose Eq. 11
+utilities differ by less than f32 epsilon resolve as a tie (lowest index
+wins) where the list path's float64 arithmetic would order them. With
+``epsilon>0`` the Gumbel perturbation is the population-scale relaxation
+of the epsilon-greedy bandit (exploration mass spreads over near-top
+utilities instead of an explicit stale-client queue).
+
+Avoiding a global ``argsort`` is deliberate: XLA's CPU sort costs ~90 ms at
+N=100k, whereas the segment-op sweeps here are linear scans (a few ms).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.selector.bandit import mix_seed
+from repro.core.selector.selection import (ClientInfo, InfeasibleStageError,
+                                           ParticipantSelector)
+
+
+# ---------------------------------------------------------------------------
+# Structure-of-arrays population
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ClientPopulation:
+    """Fleet state as device-resident arrays (one row per client).
+
+    ``client_ids`` stays on host (external identity only); every per-round
+    quantity the selector reads is a jnp array so selection never walks a
+    Python list. ``community_id`` is in ``[0, n_communities]`` where the
+    value ``n_communities`` is the "unassigned" bucket — mirrored from the
+    list path, where clients outside every fitted community are never picked
+    by the community round-robin.
+    """
+
+    client_ids: np.ndarray            # [N] host-side external ids
+    memory_bytes: jnp.ndarray         # [N] f32 — device memory capacity
+    capability: jnp.ndarray           # [N] f32 — c_i (FLOP/s)
+    num_samples: jnp.ndarray          # [N] i32 — |D_i|
+    loss_sum: jnp.ndarray             # [N] f32 — I_{t,i} (Eq. 9)
+    community_id: jnp.ndarray = None  # [N] i32
+    n_communities: int = 1
+    last_seen: jnp.ndarray = None     # [N] i32 round last selected (-1 never)
+    ef_residual_norm: jnp.ndarray = None  # [N] f32 error-feedback residual norms
+    _stage_time: Optional[jnp.ndarray] = field(default=None, repr=False)
+
+    def __post_init__(self):
+        n = self.n
+        if self.community_id is None:
+            self.community_id = jnp.zeros(n, jnp.int32)
+        if self.last_seen is None:
+            self.last_seen = jnp.full(n, -1, jnp.int32)
+        if self.ef_residual_norm is None:
+            self.ef_residual_norm = jnp.zeros(n, jnp.float32)
+
+    @property
+    def n(self) -> int:
+        return len(self.client_ids)
+
+    @classmethod
+    def from_infos(cls, infos, *, community_id=None, n_communities: int = 1
+                   ) -> "ClientPopulation":
+        """Build from ``{cid: ClientInfo}`` (sorted by client id, so array
+        index order matches the list selector's sorted-community pool order
+        and tie-breaks agree) or a sequence (order preserved — callers that
+        need a specific candidate order, e.g. the adapter mirroring the
+        bandit's insertion-order semantics, pass a pre-ordered list)."""
+        if isinstance(infos, dict):
+            infos = [infos[c] for c in sorted(infos)]
+        else:
+            infos = list(infos)
+        ids = np.asarray([c.client_id for c in infos])
+        return cls(
+            client_ids=ids,
+            memory_bytes=jnp.asarray([c.memory_bytes for c in infos],
+                                     jnp.float32),
+            capability=jnp.asarray([c.capability for c in infos], jnp.float32),
+            num_samples=jnp.asarray([c.num_samples for c in infos], jnp.int32),
+            loss_sum=jnp.asarray([c.loss_sum for c in infos], jnp.float32),
+            community_id=(None if community_id is None
+                          else jnp.asarray(community_id, jnp.int32)),
+            n_communities=n_communities)
+
+    def stage_time(self) -> jnp.ndarray:
+        """t_t^i = |D_i| / c_i, memoized on device."""
+        if self._stage_time is None:
+            self._stage_time = (self.num_samples.astype(jnp.float32)
+                                / jnp.maximum(self.capability, 1e-9))
+        return self._stage_time
+
+    def set_communities(self, community_id, n_communities: int):
+        self.community_id = jnp.asarray(community_id, jnp.int32)
+        self.n_communities = int(n_communities)
+
+    def update_loss_sums(self, idx, values):
+        """Scatter fresh I_{t,i} for the clients trained this round."""
+        self.loss_sum = self.loss_sum.at[jnp.asarray(idx)].set(
+            jnp.asarray(values, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Jitted kernels (all O(N); no global sort — see module docstring)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("n_comm",))
+def _population_stats(memory_bytes, stage_time, loss_sum, community_id,
+                      gumbel, mem_required, lam, tau, *, n_comm):
+    """Eqs. 11/12/14 + per-community coverage counts in one dispatch.
+
+    Returns (score, elig, per-community eligible counts, n_eligible) where
+    ``score`` is the (optionally Gumbel-perturbed) utility, ``-inf`` on
+    ineligible rows. ``tau = epsilon * temperature``; the noise is scaled by
+    the masked utility std so exploration strength is unit-free.
+    """
+    elig = memory_bytes >= mem_required                          # Eq. 12
+    util = loss_sum - lam * stage_time                           # Eq. 11
+    n_e = jnp.maximum(jnp.sum(elig), 1).astype(jnp.float32)
+    mu = jnp.sum(jnp.where(elig, util, 0.0)) / n_e
+    var = jnp.sum(jnp.where(elig, (util - mu) ** 2, 0.0)) / n_e
+    score = util + tau * jnp.sqrt(var + 1e-12) * gumbel
+    score = jnp.where(elig, score, -jnp.inf)
+    counts = jax.ops.segment_sum(elig.astype(jnp.int32), community_id,
+                                 num_segments=n_comm)
+    return score, elig, counts, jnp.sum(elig)                    # Eq. 14
+
+
+@partial(jax.jit, static_argnames=("n_comm",))
+def _quota_pick(score, community_id, quotas, qmax, *, n_comm):
+    """Pick the top-``quotas[c]`` members of every community by score.
+
+    One sweep per rank level: ``segment_max`` finds each community's current
+    best, ``segment_min`` over indices breaks score ties toward the lowest
+    index (== the list selector's stable pool order), winners are masked to
+    ``-inf`` and the sweep repeats. Runs ``qmax = max(quotas)`` sweeps via
+    ``lax.while_loop`` — O(N * qmax) with no sort.
+
+    Returns (picked mask [N], sweep index each pick happened at [N]).
+    """
+    n = score.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+
+    def body(carry):
+        t, sc, picked, sweep_of = carry
+        seg_best = jax.ops.segment_max(sc, community_id, num_segments=n_comm)
+        live = ((sc == seg_best[community_id]) & (quotas[community_id] > t)
+                & jnp.isfinite(sc))
+        winner = jax.ops.segment_min(jnp.where(live, idx, n), community_id,
+                                     num_segments=n_comm)
+        is_winner = live & (winner[community_id] == idx)
+        return (t + 1, jnp.where(is_winner, -jnp.inf, sc),
+                picked | is_winner, jnp.where(is_winner, t, sweep_of))
+
+    init = (jnp.int32(0), score, jnp.zeros(n, bool),
+            jnp.full(n, -1, jnp.int32))
+    _, _, picked, sweep_of = jax.lax.while_loop(lambda c: c[0] < qmax, body,
+                                                init)
+    return picked, sweep_of
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _topk_pick(score, *, k):
+    """Single-community fast path: plain top-k (lax.top_k is stable — equal
+    scores resolve to the lower index, matching the list bandit's sort)."""
+    vals, idx = jax.lax.top_k(score, k)
+    return idx, jnp.isfinite(vals)
+
+
+@jax.jit
+def _mask_to_community(score, community_id):
+    """Silence rows outside community 0 (i.e. the unassigned bucket when a
+    single community is fitted)."""
+    return jnp.where(community_id == 0, score, -jnp.inf)
+
+
+# ---------------------------------------------------------------------------
+# Host-side round-robin quota simulation (exact list-path mirror)
+# ---------------------------------------------------------------------------
+
+
+def _roundrobin_quotas(sizes: np.ndarray, k: int, rng) -> tuple:
+    """Replay ``ParticipantSelector.select``'s community round-robin on pool
+    SIZES only (O(C + k) host work). Which community fills each slot depends
+    only on eligible counts and the RandomState stream, never on member
+    identity — so this reproduces the list path's pick schedule exactly,
+    including mid-draw pool-exhaustion re-permutes.
+
+    Returns (quota per pool [len(sizes)], pick schedule [(pool, rank), ...]).
+    """
+    total_avail = int(sizes.sum())
+    k_eff = min(k, total_avail)
+    pools = [i for i in range(len(sizes)) if sizes[i] > 0]
+    taken = np.zeros(len(sizes), np.int64)
+    order = rng.permutation(len(pools)) if pools else np.empty(0, np.int64)
+    schedule: List[tuple] = []
+    ci = 0
+    while len(schedule) < k_eff and pools:
+        pool = pools[order[ci % len(pools)] % len(pools)]
+        if taken[pool] < sizes[pool]:
+            schedule.append((pool, int(taken[pool])))
+            taken[pool] += 1
+        else:
+            pools = [p for p in pools if taken[p] < sizes[p]]
+            order = rng.permutation(len(pools)) if pools else order
+        ci += 1
+    return taken, schedule
+
+
+# ---------------------------------------------------------------------------
+# Selector
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class VectorizedSelector:
+    """Drop-in ``ParticipantSelector`` replacement backed by array kernels.
+
+    Two entry points:
+
+      * ``select(clients_dict, k, mem_required=..., stage_time_fn=...)`` —
+        the list-selector contract (used by ``SmartFreezeServer``): builds a
+        throwaway ``ClientPopulation`` per call. With ``epsilon=0`` it
+        returns byte-identical picks to ``ParticipantSelector`` for the same
+        seed (regression-tested); use it as the small-N cross-check.
+      * ``select_arrays(population, k, mem_required=..., round_idx=...)`` —
+        the population-scale hot path: arrays stay resident on device across
+        rounds, each call costs two O(N) kernel dispatches plus an O(C) host
+        quota replay.
+
+    ``phi`` gates Eq. 14 feasibility exactly like the list path (raises
+    ``InfeasibleStageError`` on the memory-eligible count, before community
+    assignment is consulted).
+    """
+
+    lam: float = 1e-3                 # lambda in Eq. 11
+    epsilon: float = 0.2
+    phi: int = 2                      # Eq. 14 minimum eligible clients
+    seed: int = 0
+    temperature: float = 1.0          # gumbel-top-k softness (eps>0 only)
+    _round: int = 0
+    _communities: Optional[List[List[int]]] = None
+
+    # ----- setup -----
+
+    def fit_communities(self, similarity: np.ndarray) -> List[List[int]]:
+        """Small-N oracle path: dense RL-CD, same as the list selector."""
+        from repro.core.selector.rlcd import rlcd_communities
+        self._communities = rlcd_communities(np.asarray(similarity),
+                                             seed=self.seed)
+        return self._communities
+
+    def fit_communities_sketch(self, label_histograms: np.ndarray, *,
+                               sketch_dim: int = 64, num_neighbors: int = 8,
+                               n_iter: int = 30, block_rows: int = 4096
+                               ) -> np.ndarray:
+        """Population-scale path: hashed label-distribution sketches + tiled
+        similarity + vectorized label propagation (see rlcd.py). Returns the
+        per-row community id array (also retained for ``select_arrays`` via
+        ``attach_to``-style use: pass it to ``ClientPopulation.set_communities``)."""
+        from repro.core.selector.rlcd import sketch_communities
+        comm_id, n_comm = sketch_communities(
+            label_histograms, sketch_dim=sketch_dim,
+            num_neighbors=num_neighbors, n_iter=n_iter, seed=self.seed,
+            block_rows=block_rows)
+        self._communities = [np.flatnonzero(comm_id == c).tolist()
+                             for c in range(n_comm)]
+        return comm_id
+
+    # ----- population-scale hot path -----
+
+    def select_arrays(self, pop: ClientPopulation, k: int, *,
+                      mem_required: float, round_idx: Optional[int] = None,
+                      stage_time: Optional[jnp.ndarray] = None,
+                      round_robin: Optional[bool] = None) -> np.ndarray:
+        """One round of selection over a resident population.
+
+        Returns row indices into ``pop`` in pick order. Host syncs: the
+        [C]-sized eligible counts (for the quota replay) and the final picks.
+
+        ``round_robin`` forces the community round-robin schedule even for a
+        single fitted community (the list path's behavior whenever
+        ``fit_communities`` ran); the default uses it iff ``n_communities >
+        1`` and otherwise mirrors the bandit fast path — top-k by score,
+        except that ``k >= #eligible`` returns every eligible client in
+        ascending index order (``UtilBandit.pick``'s early return).
+        """
+        # the internal round counter is committed only AFTER the Eq. 14
+        # feasibility check: the list selector raises before its bandit's
+        # next_round(), so a caught InfeasibleStageError must not
+        # desynchronize the two implementations' RNG streams
+        commit_round = round_idx is None
+        if commit_round:
+            round_idx = self._round
+        n, n_comm = pop.n, pop.n_communities
+        tau = float(self.epsilon) * float(self.temperature)
+        if self.epsilon > 0:
+            key = jax.random.PRNGKey(mix_seed(self.seed, round_idx + 1))
+            gumbel = jax.random.gumbel(key, (n,), jnp.float32)
+        else:
+            gumbel = jnp.zeros(n, jnp.float32)
+        # community ids may include the "unassigned" bucket n_comm
+        score, _, counts, n_elig = _population_stats(
+            pop.memory_bytes,
+            pop.stage_time() if stage_time is None else stage_time,
+            pop.loss_sum, pop.community_id, gumbel,
+            jnp.float32(mem_required), jnp.float32(self.lam),
+            jnp.float32(tau), n_comm=n_comm + 1)
+        n_elig = int(n_elig)                      # host sync #1 (Eq. 14)
+        if n_elig < self.phi:
+            raise InfeasibleStageError(
+                f"only {n_elig} clients fit {mem_required / 2**20:.0f} MiB "
+                f"(phi={self.phi}) — repartition blocks or lower batch size")
+        if commit_round:
+            self._round += 1
+        sizes = np.asarray(counts)[:n_comm]       # unassigned bucket excluded
+        rng = np.random.RandomState(mix_seed(self.seed, round_idx + 1))
+        if round_robin is None:
+            round_robin = n_comm > 1
+        if n_comm == 1 and not round_robin:
+            # no communities fitted: the bandit fast path. The unassigned
+            # bucket cannot exist here, but mask it anyway for safety.
+            k_eff = min(k, int(sizes[0]))
+            if k_eff == 0:
+                return np.empty(0, np.int64)
+            in_comm = _mask_to_community(score, pop.community_id)
+            idx, valid = _topk_pick(in_comm, k=min(k, n))
+            sel = np.asarray(idx)[np.asarray(valid)][:k_eff]
+            if k_eff == int(sizes[0]):
+                # k covers every eligible client: the list path's
+                # ``bandit.pick`` early-returns the candidates in their
+                # original (ascending-index) order, not by score
+                sel = np.sort(sel)
+            pop.last_seen = pop.last_seen.at[jnp.asarray(sel)].set(round_idx)
+            return sel.astype(np.int64)
+        quotas, schedule = _roundrobin_quotas(sizes, k, rng)
+        if not schedule:
+            return np.empty(0, np.int64)
+        quotas_dev = jnp.asarray(np.concatenate([quotas, [0]]), jnp.int32)
+        picked, sweep_of = _quota_pick(score, pop.community_id, quotas_dev,
+                                       jnp.int32(quotas.max()),
+                                       n_comm=n_comm + 1)
+        picked = np.asarray(picked)               # host sync #2 (the picks)
+        sweep_of = np.asarray(sweep_of)
+        comm = np.asarray(pop.community_id)
+        sel_rows = np.flatnonzero(picked)
+        by_slot = {(int(comm[i]), int(sweep_of[i])): int(i) for i in sel_rows}
+        sel = np.asarray([by_slot[(c, t)] for c, t in schedule], np.int64)
+        pop.last_seen = pop.last_seen.at[jnp.asarray(sel)].set(round_idx)
+        return sel
+
+    # ----- list-selector-compatible adapter (small-N reference contract) ---
+
+    def select(self, clients: Dict[int, ClientInfo], k: int, *,
+               mem_required: float, stage_time_fn) -> List[int]:
+        # candidate order mirrors the list path's two regimes: with fitted
+        # communities the bandit sees sorted pool members, without them it
+        # sees the clients dict in insertion order (tie-breaks and the
+        # k >= #eligible early return follow that order)
+        ids = sorted(clients) if self._communities else list(clients)
+        infos = [clients[c] for c in ids]
+        n_comm = 1
+        community_id = None
+        if self._communities:
+            n_comm = len(self._communities)
+            by_id = {cid: c for c, comm in enumerate(self._communities)
+                     for cid in comm}
+            community_id = [by_id.get(cid, n_comm) for cid in ids]
+        pop = ClientPopulation.from_infos(
+            infos, community_id=community_id, n_communities=n_comm)
+        stage_time = jnp.asarray([stage_time_fn(c) for c in infos],
+                                 jnp.float32)
+        sel = self.select_arrays(pop, k, mem_required=mem_required,
+                                 stage_time=stage_time,
+                                 round_robin=self._communities is not None)
+        return [ids[i] for i in sel]
+
+
+def population_from_selector(selector: ParticipantSelector,
+                             infos: Dict[int, ClientInfo]) -> ClientPopulation:
+    """Convenience: snapshot a list-selector's world into arrays (communities
+    included) — used by tests and the selector_scale benchmark."""
+    comms = selector._communities or [sorted(infos)]
+    ids = sorted(infos)
+    by_id = {cid: c for c, comm in enumerate(comms) for cid in comm}
+    community_id = [by_id.get(cid, len(comms)) for cid in ids]
+    return ClientPopulation.from_infos(
+        infos, community_id=community_id, n_communities=len(comms))

@@ -104,7 +104,7 @@ def run_exclusivefl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
 def run_depthfl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
                 batch_size: int = 32, clients_per_round: int = 10,
                 eval_fn=None, seed: int = 0, local_epochs: int = 1,
-                fused: bool = True) -> Dict:
+                fused: bool = True, compress_ratio=None) -> Dict:
     """Depth-scaled submodels: client c trains stages [0..d_c) + aux head."""
     model = CNN(cfg)
     n_stages = len(cfg.stage_sizes)
@@ -137,7 +137,7 @@ def run_depthfl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
 
         return RoundEngine(loss_fn=loss_fn, optimizer=sgd(0.05),
                            batch_size=batch_size, local_epochs=local_epochs,
-                           fused=fused)
+                           fused=fused, compress_ratio=compress_ratio)
 
     engines = {d: make_engine(d) for d in range(n_stages)}
     rng = np.random.RandomState(seed)
@@ -210,7 +210,7 @@ def _slice_like(full, small):
 def run_heterofl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
                  batch_size: int = 32, clients_per_round: int = 10,
                  eval_fn=None, seed: int = 0, local_epochs: int = 1,
-                 fused: bool = True) -> Dict:
+                 fused: bool = True, compress_ratio=None) -> Dict:
     model_full = CNN(cfg)
     params_full, state_full = model_full.init(jax.random.PRNGKey(seed))
     clients_by_id = {c.client_id: c for c in clients}
@@ -233,7 +233,7 @@ def run_heterofl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
 
         return RoundEngine(loss_fn=loss_fn, optimizer=sgd(0.05),
                            batch_size=batch_size, local_epochs=local_epochs,
-                           fused=fused)
+                           fused=fused, compress_ratio=compress_ratio)
 
     engines = {s: make_engine(s) for s in _HFL_SCALES}
     rng = np.random.RandomState(seed)
@@ -313,13 +313,14 @@ def run_tifl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
     optimizer_fn = kw.pop("optimizer_fn", lambda: sgd(0.05))
     local_epochs = kw.pop("local_epochs", 1)
     fused = kw.pop("fused", True)
+    compress_ratio = kw.pop("compress_ratio", None)
     if kw:
         raise TypeError(f"run_tifl: unknown kwargs {sorted(kw)}")
     # ONE engine reused across rounds (the seed rebuilt a jitted step per
     # round-scoped sub-server, recompiling every round)
     engine = RoundEngine(loss_fn=full_loss, optimizer=optimizer_fn(),
                          batch_size=batch_size, local_epochs=local_epochs,
-                         fused=fused)
+                         fused=fused, compress_ratio=compress_ratio)
     n_stages = len(cfg.stage_sizes)
     rng = np.random.RandomState(seed)
     # monkey-select: restrict each round to one tier
@@ -342,7 +343,7 @@ def run_tifl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
 def run_oort(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
              batch_size: int = 32, clients_per_round: int = 10,
              eval_fn=None, seed: int = 0, local_epochs: int = 1,
-             fused: bool = True) -> Dict:
+             fused: bool = True, compress_ratio=None) -> Dict:
     from repro.core.selector.bandit import UtilBandit
 
     model = CNN(cfg)
@@ -359,7 +360,7 @@ def run_oort(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
 
     engine = RoundEngine(loss_fn=full_loss, optimizer=sgd(0.05),
                          batch_size=batch_size, local_epochs=local_epochs,
-                         fused=fused)
+                         fused=fused, compress_ratio=compress_ratio)
     history = []
     n_stages = len(cfg.stage_sizes)
     for r in range(rounds):

@@ -76,6 +76,34 @@ class SimClient:
         return ClientInfo(self.client_id, self.memory_bytes, self.capability,
                           self.num_samples)
 
+    def label_histogram(self, num_classes: int) -> np.ndarray:
+        """Local label counts — the raw material for the population-scale
+        sketch-similarity path (core/selector/similarity.py). Reporting a
+        hashed sketch of this histogram costs O(sketch_dim) uplink, vs the
+        output-layer gradient's O(|head|)."""
+        y = self.data["y"] if "y" in self.data else self.data["labels"]
+        return np.bincount(np.asarray(y).ravel(), minlength=num_classes)
+
+
+def fleet_label_histograms(clients: List[SimClient], num_classes: int
+                           ) -> np.ndarray:
+    """[N, num_classes] label histograms in ascending-client-id order —
+    feed to ``core.selector.rlcd.sketch_communities`` /
+    ``VectorizedSelector.fit_communities_sketch``."""
+    return np.stack([c.label_histogram(num_classes)
+                     for c in sorted(clients, key=lambda c: c.client_id)])
+
+
+def fleet_population(clients: List[SimClient], *, community_id=None,
+                     n_communities: int = 1):
+    """Snapshot a simulated fleet into a device-resident
+    ``ClientPopulation`` (structure-of-arrays) for the vectorized selector."""
+    from repro.core.selector.vectorized import ClientPopulation
+
+    return ClientPopulation.from_infos(
+        [c.info() for c in sorted(clients, key=lambda c: c.client_id)],
+        community_id=community_id, n_communities=n_communities)
+
 
 def make_client_fleet(data: Dict[str, np.ndarray], parts: List[np.ndarray], *,
                       scenario: str = "low", seed: int = 0) -> List[SimClient]:

@@ -5,6 +5,22 @@ entries per tensor and accumulates the residual locally (error feedback), so
 compression error is corrected over rounds instead of lost. Used on the
 federated uplink (client -> server) and available for the pod-level
 cross-silo aggregation.
+
+Two implementations share one selection rule:
+
+  * the host numpy path (``topk_compress``/``topk_decompress``/
+    ``ErrorFeedback``) — the small-N reference, and the wire format for a
+    real deployment;
+  * the in-graph path (``ingraph_topk``/``ingraph_sparse_aggregate``) —
+    ``lax.top_k`` + scatter ops meant to run INSIDE the fused round dispatch
+    (fl/engine.py), so compressed rounds never round-trip through host numpy.
+
+Selection rule (both paths): take the k largest |values|, breaking magnitude
+ties toward the LOWER flat index (``lax.top_k``'s documented behavior,
+mirrored on host by a stable argsort), then transmit entries in ascending
+index order. This makes compressed payloads byte-reproducible across
+platforms — ``np.argpartition``, used previously, returns a
+platform-dependent subset AND order under ties.
 """
 from __future__ import annotations
 
@@ -16,14 +32,26 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def topk_keep(n: int, ratio: float) -> int:
+    """Entries kept per leaf — shared by the host and in-graph paths."""
+    return max(1, int(n * ratio))
+
+
+def deterministic_topk_indices(flat: np.ndarray, k: int) -> np.ndarray:
+    """Indices of the k largest |values|, ties to the lower index, returned
+    ascending. Host mirror of the in-graph ``lax.top_k`` selection."""
+    order = np.argsort(-np.abs(flat), kind="stable")[:k]
+    return np.sort(order)
+
+
 def topk_compress(delta, ratio: float) -> Dict:
     """Keep the top `ratio` fraction of entries per leaf. Returns a sparse
-    representation {path: (indices, values, shape)}."""
+    representation {path: (indices, values, shape)} with indices ascending
+    (deterministic payload — see module docstring)."""
     out = {}
     for i, leaf in enumerate(jax.tree.leaves(delta)):
         flat = np.asarray(leaf, np.float32).ravel()
-        k = max(1, int(len(flat) * ratio))
-        idx = np.argpartition(np.abs(flat), -k)[-k:]
+        idx = deterministic_topk_indices(flat, topk_keep(len(flat), ratio))
         out[i] = (idx.astype(np.int32), flat[idx], leaf.shape)
     return out
 
@@ -42,9 +70,57 @@ def compressed_bytes(sparse: Dict) -> int:
     return sum(idx.nbytes + vals.nbytes for idx, vals, _ in sparse.values())
 
 
+# ---------------------------------------------------------------------------
+# In-graph primitives (consumed by fl/engine.py inside the fused dispatch)
+# ---------------------------------------------------------------------------
+
+
+def ingraph_topk(flat: jnp.ndarray, k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k |values| of a flat vector, in-graph. ``lax.top_k`` breaks ties
+    toward the lower index (same rule as ``deterministic_topk_indices``);
+    the selected indices are re-sorted ascending so the on-wire order
+    matches the host path bit-for-bit. Returns (indices i32 [k], values [k])."""
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    idx = jnp.sort(idx).astype(jnp.int32)
+    return idx, jnp.take(flat, idx)
+
+
+def ingraph_sparse_aggregate(idx: jnp.ndarray, vals: jnp.ndarray,
+                             weights: jnp.ndarray, length: int) -> jnp.ndarray:
+    """Server-side Eq. 1 aggregation over K clients' sparse uplinks, as one
+    scatter-add (segment-sum over the flat parameter index): dense [length]
+    result without ever densifying per-client payloads on host.
+
+    idx/vals: [K, k] per-client sparse entries; weights: [K] normalized."""
+    contrib = (weights[:, None] * vals).reshape(-1)
+    return jnp.zeros(length, jnp.float32).at[idx.reshape(-1)].add(contrib)
+
+
+def ingraph_compress_leaf(flat_start: jnp.ndarray, flat_end: jnp.ndarray,
+                          residual: jnp.ndarray, weights: jnp.ndarray,
+                          ratio: float):
+    """One leaf of the fused compressed round: per-client delta + error
+    feedback -> ``lax.top_k`` sparsify -> scatter-add aggregation.
+
+    flat_start: [L] round-start params (f32); flat_end: [K, L] per-client
+    trained params (f32); residual: [K, L] carried error-feedback state;
+    weights: [K] normalized Eq. 1 weights. Returns (aggregated [L] f32,
+    new residual [K, L], idx [K, k], vals [K, k]).
+    """
+    L = flat_start.shape[0]
+    k = topk_keep(L, ratio)
+    delta = flat_end - flat_start[None, :] + residual
+    idx, vals = jax.vmap(lambda d: ingraph_topk(d, k))(delta)
+    sent = jax.vmap(
+        lambda i, v: jnp.zeros(L, jnp.float32).at[i].set(v))(idx, vals)
+    new_residual = delta - sent
+    agg = flat_start + ingraph_sparse_aggregate(idx, vals, weights, L)
+    return agg, new_residual, idx, vals
+
+
 @dataclass
 class ErrorFeedback:
-    """Per-client residual accumulator for biased compressors."""
+    """Per-client residual accumulator for biased compressors (host path)."""
 
     ratio: float = 0.01
     _residual: Optional[object] = None

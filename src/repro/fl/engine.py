@@ -44,6 +44,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.fl.client import SimClient, batch_index_plan
+from repro.fl.compression import (ingraph_compress_leaf, ingraph_topk,
+                                  topk_keep)
 from repro.optim import Optimizer, apply_updates, clip_by_global_norm
 
 LossFn = Callable[[Any, Any, Any, Dict], Tuple[jnp.ndarray, Any]]
@@ -72,7 +74,8 @@ def weighted_avg(trees: Sequence, w: np.ndarray):
 
 
 def make_fused_round(loss_fn: LossFn, optimizer: Optimizer, *,
-                     clip_norm: float = 10.0, unroll: Optional[bool] = None):
+                     clip_norm: float = 10.0, unroll: Optional[bool] = None,
+                     compress_ratio: Optional[float] = None):
     """Build the single-dispatch round function.
 
     Returned callable signature::
@@ -86,6 +89,19 @@ def make_fused_round(loss_fn: LossFn, optimizer: Optimizer, *,
                    are padding and masked out)
           weights: [K] float — Eq. 1 aggregation weights (|D_i|)
           -> (agg_params, agg_state, per_client_mean_loss [K])
+
+    With ``compress_ratio`` set, the uplink is top-k sparsified INSIDE the
+    same dispatch (``lax.top_k`` per leaf on each client's param delta,
+    error feedback added before selection, server aggregation as a
+    scatter-add over the sparse (indices, values) — zero host decompress)::
+
+        round_fn(params, frozen, state, batches, nb_live, weights, residuals)
+          residuals: params-shaped pytree of [K, leaf_size] f32 — each
+                     client's carried error-feedback state
+          -> (agg_params, agg_state, per_client_mean_loss [K], new_residuals)
+
+    ``compress_ratio=1.0`` still routes through the sparse path and must
+    reproduce the dense Eq. 1 aggregate (allclose; property-tested).
 
     Lowering strategy (``unroll``, default auto by backend):
       * accelerators: ``vmap(lax.scan(step))`` over the client axis — XLA
@@ -130,41 +146,108 @@ def make_fused_round(loss_fn: LossFn, optimizer: Optimizer, *,
                                               unroll=True if unroll else 1)
         return p, st, lsum / jnp.maximum(nb, 1).astype(jnp.float32)
 
+    def make_agg(w):
+        def agg(x):
+            return jnp.einsum("k,k...->...", w,
+                              x.astype(jnp.float32)).astype(x.dtype)
+        return agg
+
+    def wsum(acc, tree, wi):
+        contrib = jax.tree.map(lambda b: wi * b.astype(jnp.float32), tree)
+        return contrib if acc is None else jax.tree.map(jnp.add, acc, contrib)
+
+    def cast_like(acc, ref):
+        return jax.tree.map(lambda a, r: a.astype(r.dtype), acc, ref)
+
+    def unrolled_clients(params, frozen, state, batches, nb_live):
+        for i in range(nb_live.shape[0]):
+            yield local_train(params, frozen, state,
+                              jax.tree.map(lambda x: x[i], batches),
+                              nb_live[i])
+
     def round_fn(params, frozen, state, batches, nb_live, weights):
         K = nb_live.shape[0]
         w = (weights / jnp.sum(weights)).astype(jnp.float32)
         if unroll:
-            def wsum(acc, tree, wi):
-                contrib = jax.tree.map(lambda b: wi * b.astype(jnp.float32), tree)
-                return contrib if acc is None else jax.tree.map(jnp.add, acc,
-                                                                contrib)
-
+            # incremental weighted sum: at most ONE extra model copy live at
+            # a time (stacking K client trees would be an O(K) peak-memory
+            # regression on the CPU path the memory model budgets for)
             agg_p = agg_st = None
             losses = []
-            for i in range(K):
-                p_i, st_i, loss_i = local_train(
-                    params, frozen, state,
-                    jax.tree.map(lambda x: x[i], batches), nb_live[i])
+            for i, (p_i, st_i, loss_i) in enumerate(
+                    unrolled_clients(params, frozen, state, batches, nb_live)):
                 agg_p = wsum(agg_p, p_i, w[i])
                 agg_st = wsum(agg_st, st_i, w[i])
                 losses.append(loss_i)
-            cast = lambda acc, ref: jax.tree.map(
-                lambda a, r: a.astype(r.dtype), acc, ref)
-            return cast(agg_p, params), cast(agg_st, state), jnp.stack(losses)
+            return (cast_like(agg_p, params), cast_like(agg_st, state),
+                    jnp.stack(losses))
         bcast = lambda x: jnp.broadcast_to(x[None], (K,) + x.shape)
-        podded = jax.tree.map(bcast, params)
-        st_pod = jax.tree.map(bcast, state)
         out_p, out_st, losses = jax.vmap(
             local_train, in_axes=(0, None, 0, 0, 0))(
-            podded, frozen, st_pod, batches, nb_live)
-
-        def agg(x):
-            return jnp.einsum("k,k...->...", w,
-                              x.astype(jnp.float32)).astype(x.dtype)
-
+            jax.tree.map(bcast, params), frozen, jax.tree.map(bcast, state),
+            batches, nb_live)
+        agg = make_agg(w)
         return jax.tree.map(agg, out_p), jax.tree.map(agg, out_st), losses
 
-    # the CPU backend cannot alias donated buffers — donate only where it helps
+    def round_fn_compressed(params, frozen, state, batches, nb_live, weights,
+                            residuals):
+        K = nb_live.shape[0]
+        w = (weights / jnp.sum(weights)).astype(jnp.float32)
+        p_leaves, treedef = jax.tree.flatten(params)
+        r_leaves = jax.tree.leaves(residuals)      # [K, leaf_size] each
+        if unroll:
+            # per-client incremental compress: only the [K, L] residual
+            # state (inherent to error feedback) outlives a client's turn
+            agg_acc = [jnp.zeros(p0.size, jnp.float32) for p0 in p_leaves]
+            new_r_rows = [[] for _ in p_leaves]
+            agg_st = None
+            losses = []
+            for i, (p_i, st_i, loss_i) in enumerate(
+                    unrolled_clients(params, frozen, state, batches, nb_live)):
+                for j, (p0, pi) in enumerate(zip(p_leaves,
+                                                 jax.tree.leaves(p_i))):
+                    delta = (pi.astype(jnp.float32).reshape(-1)
+                             - p0.astype(jnp.float32).reshape(-1)
+                             + r_leaves[j][i])
+                    idx, vals = ingraph_topk(
+                        delta, topk_keep(p0.size, compress_ratio))
+                    agg_acc[j] = agg_acc[j].at[idx].add(w[i] * vals)
+                    # residual = delta - sent: the kept entries were
+                    # transmitted exactly, so they zero out
+                    new_r_rows[j].append(delta.at[idx].set(0.0))
+                agg_st = wsum(agg_st, st_i, w[i])
+                losses.append(loss_i)
+            new_p = [(p0.astype(jnp.float32).reshape(-1) + acc)
+                     .reshape(p0.shape).astype(p0.dtype)
+                     for p0, acc in zip(p_leaves, agg_acc)]
+            return (jax.tree.unflatten(treedef, new_p),
+                    cast_like(agg_st, state), jnp.stack(losses),
+                    jax.tree.unflatten(treedef, [jnp.stack(rows)
+                                                 for rows in new_r_rows]))
+        bcast = lambda x: jnp.broadcast_to(x[None], (K,) + x.shape)
+        out_p, out_st, losses = jax.vmap(
+            local_train, in_axes=(0, None, 0, 0, 0))(
+            jax.tree.map(bcast, params), frozen, jax.tree.map(bcast, state),
+            batches, nb_live)
+        new_p, new_r = [], []
+        for p0, pk, r in zip(p_leaves, jax.tree.leaves(out_p), r_leaves):
+            agg_flat, r_new, _, _ = ingraph_compress_leaf(
+                p0.astype(jnp.float32).reshape(-1),
+                pk.astype(jnp.float32).reshape(K, -1), r, w, compress_ratio)
+            new_p.append(agg_flat.reshape(p0.shape).astype(p0.dtype))
+            new_r.append(r_new)
+        # mutable state (BN stats) stays a dense server-side average — only
+        # the parameter uplink is compressed
+        return (jax.tree.unflatten(treedef, new_p),
+                jax.tree.map(make_agg(w), out_st), losses,
+                jax.tree.unflatten(treedef, new_r))
+
+    # the CPU backend cannot alias donated buffers — donate only where it
+    # helps; the stacked batches (and carried residuals) are rebuilt from
+    # host/per-client state every round, so both are safe to donate
+    if compress_ratio is not None:
+        donate = (3, 6) if jax.default_backend() != "cpu" else ()
+        return jax.jit(round_fn_compressed, donate_argnums=donate)
     donate = (3,) if jax.default_backend() != "cpu" else ()
     return jax.jit(round_fn, donate_argnums=donate)
 
@@ -183,7 +266,18 @@ class RoundEngine:
     same ``batch["x"]`` key; ``feature_fn(x) -> features`` is the frozen
     prefix itself. All three close over the current stage's frozen tree /
     plan — construct a fresh engine at every stage boundary, which is also
-    what invalidates the feature cache on model growth.
+    what invalidates the feature cache on model growth (and, with
+    compression on, resets error-feedback residuals, whose shapes follow
+    the stage's active params).
+
+    ``compress_ratio`` turns on in-graph top-k uplink sparsification with
+    error feedback: residuals live on device in per-leaf [n_clients_seen,
+    leaf_size] row pools (one gather on dispatch entry, one scatter on
+    exit — NOT per-client stacking, which would reintroduce O(K x leaves)
+    small device ops around the single fused dispatch), and come back
+    updated — the round's hot path never materializes a dense per-client
+    delta on host. ``last_uplink_bytes`` reports the (index, value)
+    payload the round would have put on the wire.
     """
     loss_fn: LossFn
     optimizer: Optimizer
@@ -194,8 +288,12 @@ class RoundEngine:
     local_epochs: int = 1
     clip_norm: float = 10.0
     fused: bool = True
+    compress_ratio: Optional[float] = None
+    last_uplink_bytes: int = 0
     _features: Dict[int, np.ndarray] = field(default_factory=dict, repr=False)
     _jit_cache: Dict[str, Callable] = field(default_factory=dict, repr=False)
+    _res_pool: List = field(default_factory=list, repr=False)   # per leaf [cap, L]
+    _res_row: Dict[int, int] = field(default_factory=dict, repr=False)
 
     # ----- frozen-prefix feature cache -----
 
@@ -211,6 +309,65 @@ class RoundEngine:
     def cache_nbytes(self) -> int:
         return sum(f.nbytes for f in self._features.values())
 
+    # ----- error-feedback residual state (on-device, per client) -----
+
+    def _residual_rows(self, cids: List[int], leaves) -> np.ndarray:
+        """Pool row index per client, growing the per-leaf [cap, L] pools
+        (zero-filled == empty residual) as new clients appear."""
+        for cid in cids:
+            if cid not in self._res_row:
+                self._res_row[cid] = len(self._res_row)
+        need = len(self._res_row)
+        if not self._res_pool:
+            self._res_pool = [jnp.zeros((need, l.size), jnp.float32)
+                              for l in leaves]
+        elif self._res_pool[0].shape[0] < need:
+            cap = max(need, 2 * self._res_pool[0].shape[0])
+            self._res_pool = [
+                jnp.concatenate([p, jnp.zeros((cap - p.shape[0], p.shape[1]),
+                                              jnp.float32)]) for p in self._res_pool]
+        return np.asarray([self._res_row[cid] for cid in cids])
+
+    def _gather_residuals(self, cids: List[int], params):
+        """Cohort residuals as a params-shaped tree of [K, L] leaves — ONE
+        gather per leaf from the resident pool."""
+        leaves, treedef = jax.tree.flatten(params)
+        rows = self._residual_rows(cids, leaves)
+        rows_dev = jnp.asarray(rows)
+        return jax.tree.unflatten(treedef,
+                                  [p[rows_dev] for p in self._res_pool]), rows
+
+    def _scatter_residuals(self, rows: np.ndarray, new_residuals):
+        rows_dev = jnp.asarray(rows)
+        self._res_pool = [pool.at[rows_dev].set(leaf) for pool, leaf in
+                          zip(self._res_pool, jax.tree.leaves(new_residuals))]
+
+    def client_residuals(self, cid: int) -> List[jnp.ndarray]:
+        """This client's per-leaf error-feedback residual vectors."""
+        row = self._res_row[cid]
+        return [p[row] for p in self._res_pool]
+
+    def residual_norms(self) -> Dict[int, float]:
+        """Per-client ||error-feedback residual||_2 — feeds
+        ``ClientPopulation.ef_residual_norm`` for selection policies that
+        prefer clients with pent-up un-transmitted signal."""
+        if not self._res_pool:
+            return {}
+        fn = self._jit_cache.setdefault(
+            "res_norm", jax.jit(lambda pools: jnp.sqrt(
+                sum(jnp.sum(p.astype(jnp.float32) ** 2, axis=1)
+                    for p in pools))))
+        norms = np.asarray(fn(self._res_pool))
+        return {cid: float(norms[row]) for cid, row in self._res_row.items()}
+
+    def _uplink_bytes(self, params, n_clients: int) -> int:
+        """(index, value) payload per client, summed over the cohort."""
+        leaves = jax.tree.leaves(params)
+        if self.compress_ratio is None:
+            return n_clients * sum(l.size * 4 for l in leaves)
+        return n_clients * sum(topk_keep(l.size, self.compress_ratio) * 8
+                               for l in leaves)
+
     # ----- round execution -----
 
     def run_round(self, clients: Dict[int, SimClient], selected: List[int],
@@ -225,6 +382,7 @@ class RoundEngine:
         algebraically the same Eq. 1 average as a single flat cohort."""
         use_cache = use_cache or {}
         seq = (not self.fused) if sequential is None else sequential
+        self.last_uplink_bytes = 0
         groups: Dict[bool, List[int]] = {}
         for cid in selected:
             cached = bool(use_cache.get(cid)) and self.cached_loss_fn is not None
@@ -280,12 +438,20 @@ class RoundEngine:
         fn = self._jit_cache.get(key)
         if fn is None:
             fn = make_fused_round(self.cached_loss_fn if cached else self.loss_fn,
-                                  self.optimizer, clip_norm=self.clip_norm)
+                                  self.optimizer, clip_norm=self.clip_norm,
+                                  compress_ratio=self.compress_ratio)
             self._jit_cache[key] = fn
         frozen = {} if cached else (self.frozen if self.frozen is not None else {})
-        p_g, s_g, l_g = fn(params, frozen, state,
-                           {k: jnp.asarray(v) for k, v in stacked.items()},
-                           jnp.asarray(nb_live), jnp.asarray(weights))
+        args = (params, frozen, state,
+                {k: jnp.asarray(v) for k, v in stacked.items()},
+                jnp.asarray(nb_live), jnp.asarray(weights))
+        if self.compress_ratio is not None:
+            residuals, rows = self._gather_residuals(cids, params)
+            p_g, s_g, l_g, new_r = fn(*args, residuals)
+            self._scatter_residuals(rows, new_r)
+        else:
+            p_g, s_g, l_g = fn(*args)
+        self.last_uplink_bytes += self._uplink_bytes(params, len(cids))
         l_host = np.asarray(l_g)  # ONE blocking sync for the whole cohort
         return (p_g, s_g, {cid: float(l_host[i]) for i, cid in enumerate(cids)},
                 float(weights.sum()))
@@ -308,6 +474,29 @@ class RoundEngine:
             fn = self._jit_cache[key] = jax.jit(step)
         return fn
 
+    def _seq_compress(self):
+        """Per-client jitted compress step for the sequential path — same
+        ``ingraph_compress_leaf`` math as the fused dispatch (K=1), so
+        sequential and fused compressed rounds agree."""
+        fn = self._jit_cache.get("seq_compress")
+        if fn is None:
+            ratio = self.compress_ratio
+
+            def comp(params, p_i, res_leaves):
+                leaves, treedef = jax.tree.flatten(params)
+                new_p, new_r = [], []
+                for p0, pi, r in zip(leaves, jax.tree.leaves(p_i), res_leaves):
+                    sent, r_new, _, _ = ingraph_compress_leaf(
+                        p0.astype(jnp.float32).reshape(-1),
+                        pi.astype(jnp.float32).reshape(1, -1), r[None, :],
+                        jnp.ones(1, jnp.float32), ratio)
+                    new_p.append(sent.reshape(p0.shape).astype(p0.dtype))
+                    new_r.append(r_new[0])
+                return jax.tree.unflatten(treedef, new_p), new_r
+
+            fn = self._jit_cache["seq_compress"] = jax.jit(comp)
+        return fn
+
     def _run_sequential(self, clients, cids, params, state, round_idx, *, cached):
         step = self._seq_step(cached)
         frozen = {} if cached else (self.frozen if self.frozen is not None else {})
@@ -324,9 +513,16 @@ class RoundEngine:
                 jb = {k: jnp.asarray(v[idx]) for k, v in data.items()}
                 p_i, s_i, ost, loss = step(p_i, frozen, s_i, ost, jb)
                 batch_losses.append(float(loss))
+            if self.compress_ratio is not None:
+                rows = self._residual_rows([cid], jax.tree.leaves(params))
+                p_i, new_r = self._seq_compress()(
+                    params, p_i, [p[rows[0]] for p in self._res_pool])
+                self._res_pool = [p.at[rows[0]].set(r) for p, r in
+                                  zip(self._res_pool, new_r)]
             updates.append((p_i, s_i))
             weights.append(c.num_samples)
             losses[cid] = float(np.mean(batch_losses)) if batch_losses else 0.0
+        self.last_uplink_bytes += self._uplink_bytes(params, len(cids))
         w = np.asarray(weights, np.float64)
         w /= w.sum()
         return (weighted_avg([u[0] for u in updates], w),

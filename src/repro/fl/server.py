@@ -13,6 +13,13 @@ Round execution is delegated to ``fl/engine.py``: one fused
 vmap-over-clients dispatch per round plus a frozen-prefix feature cache
 (declined per client via the memory-model hook below). The
 deadline/straggler path keeps the sequential ``fused=False`` escape hatch.
+``compress_ratio`` turns on the engine's in-graph top-k + error-feedback
+uplink (see fl/compression.py); per-round payloads land in
+``RoundResult.uplink_bytes``.
+
+``selector`` accepts either the list-based ``ParticipantSelector`` or the
+population-scale ``core.selector.vectorized.VectorizedSelector`` — both
+implement ``fit_communities`` + ``select`` with the same contract.
 """
 from __future__ import annotations
 
@@ -45,6 +52,7 @@ class RoundResult:
     selected: List[int] = field(default_factory=list)
     perturbation: Optional[float] = None
     frozen: bool = False
+    uplink_bytes: Optional[int] = None   # cohort uplink payload this round
 
 
 def cnn_feature_cache_bytes(model: CNN, stage: int, num_samples: int,
@@ -100,7 +108,8 @@ class SmartFreezeServer:
                  pace_kwargs: Optional[dict] = None,
                  op_kind: str = "conv", selector: Optional[ParticipantSelector] = None,
                  deadline_factor: float = 0.0, seed: int = 0,
-                 fused: bool = True, cache_features: bool = True):
+                 fused: bool = True, cache_features: bool = True,
+                 compress_ratio: Optional[float] = None):
         self.model = model
         self.clients = {c.client_id: c for c in clients}
         self.optimizer_fn = optimizer_fn
@@ -115,6 +124,7 @@ class SmartFreezeServer:
         self.seed = seed
         self.fused = fused
         self.cache_features = cache_features
+        self.compress_ratio = compress_ratio
         self.history: List[RoundResult] = []
         self._last_loss: Dict[int, float] = {}
         self.image_size = int(next(iter(self.clients.values())).data["x"].shape[1])
@@ -155,7 +165,8 @@ class SmartFreezeServer:
             optimizer=self.optimizer_fn(), frozen=frozen,
             cached_loss_fn=cached_loss, feature_fn=feature_fn,
             batch_size=self.batch_size, local_epochs=self.local_epochs,
-            clip_norm=10.0, fused=self.fused)
+            clip_norm=10.0, fused=self.fused,
+            compress_ratio=self.compress_ratio)
 
     def _cache_plan(self, stage: int) -> Dict[int, bool]:
         """Memory-model gate: cache only on clients whose capacity covers the
@@ -229,7 +240,8 @@ class SmartFreezeServer:
                 do_freeze = pace.should_freeze() and schedule is None
                 mean_loss = float(np.mean(list(losses.values())))
                 rr = RoundResult(round_idx, stage, mean_loss, selected=selected,
-                                 perturbation=p, frozen=do_freeze)
+                                 perturbation=p, frozen=do_freeze,
+                                 uplink_bytes=engine.last_uplink_bytes)
                 if eval_fn is not None and (round_idx % eval_every == 0 or do_freeze):
                     merged = fz.merge_cnn_params(model, params, stage, active)
                     rr.test_acc = eval_fn(merged, state, stage)
@@ -249,7 +261,8 @@ class FedAvgServer:
     def __init__(self, model: CNN, clients: List[SimClient], *,
                  optimizer_fn=lambda: sgd(0.05), clients_per_round: int = 10,
                  local_epochs: int = 1, batch_size: int = 32,
-                 mem_required: float = 0.0, seed: int = 0, fused: bool = True):
+                 mem_required: float = 0.0, seed: int = 0, fused: bool = True,
+                 compress_ratio: Optional[float] = None):
         self.model = model
         self.clients = {c.client_id: c for c in clients}
         self.optimizer_fn = optimizer_fn
@@ -259,6 +272,7 @@ class FedAvgServer:
         self.mem_required = mem_required
         self.seed = seed
         self.fused = fused
+        self.compress_ratio = compress_ratio
         self.history: List[RoundResult] = []
 
     def run(self, params, state, *, rounds: int, eval_fn=None, eval_every=10):
@@ -271,7 +285,8 @@ class FedAvgServer:
         engine = RoundEngine(loss_fn=full_loss, optimizer=self.optimizer_fn(),
                              batch_size=self.batch_size,
                              local_epochs=self.local_epochs,
-                             clip_norm=10.0, fused=self.fused)
+                             clip_norm=10.0, fused=self.fused,
+                             compress_ratio=self.compress_ratio)
         rng = np.random.RandomState(self.seed)
         eligible = [cid for cid, c in self.clients.items()
                     if c.memory_bytes >= self.mem_required]
@@ -283,7 +298,8 @@ class FedAvgServer:
             params, state, losses = engine.run_round(
                 self.clients, sel, params, state, r)
             rr = RoundResult(r, n_stages - 1,
-                             float(np.mean(list(losses.values()))), selected=sel)
+                             float(np.mean(list(losses.values()))), selected=sel,
+                             uplink_bytes=engine.last_uplink_bytes)
             if eval_fn is not None and r % eval_every == 0:
                 rr.test_acc = eval_fn(params, state, n_stages - 1)
             self.history.append(rr)

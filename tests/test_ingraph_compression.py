@@ -1,0 +1,245 @@
+"""In-graph compressed uplink aggregation (PR 2): lax.top_k path vs the
+host reference, ratio=1.0 == dense Eq. 1 (property), error-feedback
+convergence, fused == sequential under compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.fl.compression import (deterministic_topk_indices,
+                                  ingraph_compress_leaf,
+                                  ingraph_sparse_aggregate, ingraph_topk,
+                                  topk_compress, topk_keep)
+
+
+def _engine_fixture(num_clients=4, samples=160, classes=4, image=8, seed=0):
+    from repro.data.partition import iid_partition
+    from repro.data.synthetic import SyntheticVision
+    from repro.fl.client import make_client_fleet
+    from repro.fl.engine import RoundEngine
+    from repro.models.cnn import CNN, CNNConfig
+    from repro.optim import sgd
+
+    sv = SyntheticVision(num_classes=classes, image_size=image)
+    train = sv.sample(samples, seed=1)
+    parts = iid_partition(train["y"], num_clients, seed=0)
+    clients = make_client_fleet(train, parts, scenario="low", seed=seed)
+    by_id = {c.client_id: c for c in clients}
+    cfg = CNNConfig("rn", "resnet", stage_sizes=(1,), stage_channels=(8,),
+                    num_classes=classes)
+    model = CNN(cfg)
+    params, state = model.init(jax.random.PRNGKey(seed))
+
+    def full_loss(p, frozen_unused, st, batch):
+        return model.loss(p, st, batch, train=True)
+
+    def make(ratio, fused=True):
+        return RoundEngine(loss_fn=full_loss, optimizer=sgd(0.05),
+                           batch_size=16, local_epochs=1, fused=fused,
+                           compress_ratio=ratio)
+
+    return by_id, sorted(by_id), params, state, make
+
+
+def _leaves_allclose(a, b, rtol=2e-4, atol=2e-4):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32),
+                                   rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# primitive-level: in-graph selection mirrors the host payload exactly
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(8, 300), frac_ties=st.sampled_from([0.0, 0.3, 0.9]),
+       seed=st.integers(0, 10_000))
+def test_ingraph_topk_matches_host_selection(n, frac_ties, seed):
+    """Same k entries, same (ascending) index order — including under
+    magnitude ties, where argpartition used to be platform-dependent."""
+    rng = np.random.RandomState(seed)
+    flat = rng.randn(n).astype(np.float32)
+    ties = rng.rand(n) < frac_ties
+    flat[ties] = np.sign(flat[ties]) * 1.0       # plant exact-|value| ties
+    k = max(1, n // 7)
+    idx_host = deterministic_topk_indices(flat, k)
+    idx_dev, vals_dev = ingraph_topk(jnp.asarray(flat), k)
+    np.testing.assert_array_equal(idx_host, np.asarray(idx_dev))
+    np.testing.assert_array_equal(flat[idx_host], np.asarray(vals_dev))
+    assert (np.diff(np.asarray(idx_dev)) > 0).all()   # ascending payload
+
+
+def test_topk_compress_payload_is_sorted_and_deterministic():
+    flat = np.zeros(64, np.float32)
+    flat[::2] = 0.5                                    # 32-way tie
+    sparse = topk_compress({"w": jnp.asarray(flat)}, ratio=0.25)
+    idx, vals, shape = sparse[0]
+    assert (np.diff(idx) > 0).all()
+    # ties resolved toward the lowest indices: the first 16 even slots
+    np.testing.assert_array_equal(idx, np.arange(32, dtype=np.int32)[::2][:16])
+    np.testing.assert_array_equal(vals, np.full(16, 0.5, np.float32))
+
+
+def test_ingraph_sparse_aggregate_is_weighted_scatter_add():
+    idx = jnp.asarray([[0, 2, 5], [2, 3, 5]], jnp.int32)
+    vals = jnp.asarray([[1.0, 2.0, 3.0], [4.0, 5.0, 6.0]], jnp.float32)
+    w = jnp.asarray([0.25, 0.75], jnp.float32)
+    out = np.asarray(ingraph_sparse_aggregate(idx, vals, w, 8))
+    expect = np.zeros(8, np.float32)
+    expect[[0, 2, 5]] += 0.25 * np.asarray([1.0, 2.0, 3.0])
+    expect[[2, 3, 5]] += 0.75 * np.asarray([4.0, 5.0, 6.0])
+    np.testing.assert_allclose(out, expect, rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(length=st.integers(16, 400), k_clients=st.integers(1, 5),
+       seed=st.integers(0, 9999))
+def test_compress_leaf_ratio1_is_exact_eq1(length, k_clients, seed):
+    """Property: at ratio=1.0 the sparse path IS dense Eq. 1 aggregation."""
+    rng = np.random.RandomState(seed)
+    start = rng.randn(length).astype(np.float32)
+    end = rng.randn(k_clients, length).astype(np.float32)
+    res = jnp.zeros((k_clients, length), jnp.float32)
+    w = rng.rand(k_clients).astype(np.float32) + 0.1
+    w /= w.sum()
+    agg, new_r, _, _ = ingraph_compress_leaf(
+        jnp.asarray(start), jnp.asarray(end), res, jnp.asarray(w), 1.0)
+    expect = start + (w[:, None] * (end - start[None])).sum(0)
+    np.testing.assert_allclose(np.asarray(agg), expect, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(new_r), 0.0, atol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(ratio=st.sampled_from([0.05, 0.1, 0.3]), seed=st.integers(0, 999))
+def test_error_feedback_residuals_converge(ratio, seed):
+    """Property: over K rounds of compressing the SAME delta, the cumulative
+    transmitted aggregate approaches K * delta (error feedback re-sends what
+    top-k dropped), far closer than memoryless top-k."""
+    rng = np.random.RandomState(seed)
+    length, rounds = 120, 40
+    delta = rng.randn(length).astype(np.float32)
+    start = jnp.zeros(length, jnp.float32)
+    res = jnp.zeros((1, length), jnp.float32)
+    w = jnp.ones(1, jnp.float32)
+    sent_ef = np.zeros(length, np.float64)
+    sent_plain = np.zeros(length, np.float64)
+    k = topk_keep(length, ratio)
+    for _ in range(rounds):
+        agg, res, _, _ = ingraph_compress_leaf(
+            start, jnp.asarray(delta)[None], res, w, ratio)
+        sent_ef += np.asarray(agg)
+        i, v = ingraph_topk(jnp.asarray(delta), k)
+        plain = np.zeros(length, np.float32)
+        plain[np.asarray(i)] = np.asarray(v)
+        sent_plain += plain
+    target = rounds * delta.astype(np.float64)
+    err_ef = np.linalg.norm(sent_ef - target)
+    err_plain = np.linalg.norm(sent_plain - target)
+    # EF's lag is a bounded backlog; memoryless top-k's error grows with
+    # the round count (same 0.5 margin as the host-path EF test)
+    assert err_ef < 0.5 * err_plain, (err_ef, err_plain)
+    # the carried residual stays bounded (no drift)
+    assert float(jnp.abs(res).max()) < np.abs(delta).max() * length
+
+
+# ---------------------------------------------------------------------------
+# engine-level: the fused compressed round
+# ---------------------------------------------------------------------------
+
+
+def test_fused_compressed_ratio1_matches_dense_round():
+    by_id, sel, params, state, make = _engine_fixture()
+    p_d, s_d, l_d = make(None).run_round(by_id, sel, params, state, 0)
+    p_c, s_c, l_c = make(1.0).run_round(by_id, sel, params, state, 0)
+    _leaves_allclose(p_d, p_c)
+    _leaves_allclose(s_d, s_c)
+    assert l_d.keys() == l_c.keys()
+    for cid in l_d:
+        assert abs(l_d[cid] - l_c[cid]) < 1e-4
+
+
+def test_fused_compressed_equals_sequential_compressed():
+    by_id, sel, params, state, make = _engine_fixture()
+    ef, es = make(0.2, fused=True), make(0.2, fused=False)
+    pf, sf = params, state
+    ps, ss = params, state
+    for r in range(3):
+        pf, sf, _ = ef.run_round(by_id, sel, pf, sf, r)
+        ps, ss, _ = es.run_round(by_id, sel, ps, ss, r)
+    _leaves_allclose(pf, ps)
+    _leaves_allclose(sf, ss)
+    # identical error-feedback state too
+    for cid in sel:
+        for a, b in zip(ef.client_residuals(cid), es.client_residuals(cid)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-4, atol=2e-4)
+
+
+def test_compressed_rounds_track_dense_training():
+    """K rounds at ratio=0.1 with error feedback stay close to the dense
+    trajectory (the compressed sum converges to the dense sum), while
+    memoryless low-ratio rounds would not move most coordinates at all."""
+    by_id, sel, params, state, make = _engine_fixture()
+    e_d, e_c = make(None), make(0.1)
+    pd, sd = params, state
+    pc, sc = params, state
+    for r in range(8):
+        pd, sd, _ = e_d.run_round(by_id, sel, pd, sd, r)
+        pc, sc, _ = e_c.run_round(by_id, sel, pc, sc, r)
+    num = den = 0.0
+    for a, b, p0 in zip(jax.tree.leaves(pd), jax.tree.leaves(pc),
+                        jax.tree.leaves(params)):
+        num += float(jnp.sum((a.astype(jnp.float32)
+                              - b.astype(jnp.float32)) ** 2))
+        den += float(jnp.sum((a.astype(jnp.float32)
+                              - p0.astype(jnp.float32)) ** 2))
+    assert den > 0
+    assert (num / den) ** 0.5 < 0.5    # within 50% of the dense move
+    # every client carries nonzero pent-up residual
+    norms = e_c.residual_norms()
+    assert set(norms) == set(sel)
+    assert all(v > 0 for v in norms.values())
+
+
+def test_uplink_bytes_accounting():
+    by_id, sel, params, state, make = _engine_fixture()
+    e_d, e_c = make(None), make(0.1)
+    e_d.run_round(by_id, sel, params, state, 0)
+    e_c.run_round(by_id, sel, params, state, 0)
+    dense = sum(l.size * 4 for l in jax.tree.leaves(params)) * len(sel)
+    assert e_d.last_uplink_bytes == dense
+    assert 0 < e_c.last_uplink_bytes < 0.3 * dense
+
+
+def test_server_compressed_run_and_history():
+    """SmartFreezeServer with compress_ratio: trains, and logs shrunken
+    uplink payloads per round."""
+    from repro.data.partition import dirichlet_partition
+    from repro.data.synthetic import SyntheticVision
+    from repro.fl.client import make_client_fleet
+    from repro.fl.server import SmartFreezeServer
+    from repro.models.cnn import CNN, CNNConfig
+
+    sv = SyntheticVision(num_classes=4, image_size=8)
+    train = sv.sample(256, seed=1)
+    parts = dirichlet_partition(train["y"], 8, alpha=1.0, seed=0)
+    clients = make_client_fleet(train, parts, scenario="low", seed=0)
+    cfg = CNNConfig("rn", "resnet", stage_sizes=(1,), stage_channels=(8,),
+                    num_classes=4)
+    model = CNN(cfg)
+    params, state = model.init(jax.random.PRNGKey(0))
+
+    def run(ratio):
+        srv = SmartFreezeServer(model, clients, clients_per_round=4,
+                                batch_size=16, rounds_per_stage=2,
+                                compress_ratio=ratio, seed=0,
+                                pace_kwargs=dict(min_rounds=999))
+        return srv.run(params, state, total_rounds=2)
+
+    out_c, out_d = run(0.1), run(None)
+    bytes_c = [r.uplink_bytes for r in out_c["history"]]
+    bytes_d = [r.uplink_bytes for r in out_d["history"]]
+    assert all(b is not None and 0 < b < 0.3 * d
+               for b, d in zip(bytes_c, bytes_d))

@@ -1,0 +1,346 @@
+"""Vectorized population selector vs the list-based reference, sketch
+similarity + label propagation vs the dense Louvain/RL-CD oracle, and the
+selector-seed regression (PR 2)."""
+import numpy as np
+import pytest
+
+from repro.core.selector import (ClientInfo, ClientPopulation,
+                                 ParticipantSelector, VectorizedSelector,
+                                 label_propagation, louvain,
+                                 population_from_selector, sketch_communities,
+                                 similarity_matrix, topm_neighbors)
+from repro.core.selector.selection import InfeasibleStageError
+from repro.core.selector.similarity import label_sketches, sketch_projection
+
+
+def _fleet(n=40, seed=0):
+    rng = np.random.RandomState(seed)
+    return {i: ClientInfo(i, memory_bytes=float(rng.choice([1, 2, 4, 8])) * 2**30,
+                          capability=float(rng.choice([1e9, 2.5e9])),
+                          num_samples=int(rng.randint(10, 200)),
+                          loss_sum=float(rng.rand())) for i in range(n)}
+
+
+def _clustered_sim(n_groups=3, per=6, seed=0):
+    rng = np.random.RandomState(seed)
+    vecs = {}
+    for g in range(n_groups):
+        proto = np.zeros(48)
+        proto[g * 16:(g + 1) * 16] = 1.0
+        for i in range(per):
+            vecs[g * per + i] = proto + rng.randn(48) * 0.05
+    return similarity_matrix(vecs), n_groups, per
+
+
+def _time_fn(c):
+    return c.num_samples / c.capability
+
+
+# ---------------------------------------------------------------------------
+# vectorized vs list-based selector (same picks, same RNG, epsilon=0)
+# ---------------------------------------------------------------------------
+
+
+def test_vectorized_matches_list_no_communities():
+    clients = _fleet()
+    ls = ParticipantSelector(epsilon=0.0, seed=3)
+    vs = VectorizedSelector(epsilon=0.0, seed=3)
+    for _ in range(4):
+        for k in (3, 7, 15):
+            pa = ls.select(clients, k, mem_required=1.5 * 2**30,
+                           stage_time_fn=_time_fn)
+            pb = vs.select(clients, k, mem_required=1.5 * 2**30,
+                           stage_time_fn=_time_fn)
+            assert pa == pb
+
+
+def test_vectorized_matches_list_when_k_exceeds_eligible():
+    """Regression: when k >= the eligible count, the list path's
+    ``bandit.pick`` early-returns the candidates in original order rather
+    than by utility — the pick ORDER must still match."""
+    clients = {0: ClientInfo(0, 2**33, 1e9, 10, loss_sum=1.0),
+               1: ClientInfo(1, 2**33, 1e9, 10, loss_sum=2.0),
+               2: ClientInfo(2, 2**33, 1e9, 10, loss_sum=9.0)}
+    for k in (3, 5):
+        ls = ParticipantSelector(epsilon=0.0, seed=0)
+        vs = VectorizedSelector(epsilon=0.0, seed=0)
+        pa = ls.select(clients, k, mem_required=0, stage_time_fn=_time_fn)
+        pb = vs.select(clients, k, mem_required=0, stage_time_fn=_time_fn)
+        assert pa == pb == [0, 1, 2]
+
+
+def test_vectorized_matches_list_with_shuffled_dict_order():
+    """Regression: without communities, the list path's candidate order is
+    the clients dict's INSERTION order (it drives tie-breaks and the
+    k >= #eligible early return) — the adapter must mirror it, not sort."""
+    base = _fleet(20, seed=4)
+    order = np.random.RandomState(0).permutation(20)
+    clients = {int(i): base[int(i)] for i in order}      # shuffled insertion
+    for k in (5, 50):                                     # both regimes
+        ls = ParticipantSelector(epsilon=0.0, seed=2)
+        vs = VectorizedSelector(epsilon=0.0, seed=2)
+        pa = ls.select(clients, k, mem_required=1.5 * 2**30,
+                       stage_time_fn=_time_fn)
+        pb = vs.select(clients, k, mem_required=1.5 * 2**30,
+                       stage_time_fn=_time_fn)
+        assert pa == pb
+
+
+def test_vectorized_matches_list_with_communities():
+    W, ng, per = _clustered_sim()
+    rng = np.random.RandomState(1)
+    clients = {i: ClientInfo(i, memory_bytes=2**33, capability=1e9,
+                             num_samples=10 + i, loss_sum=float(rng.rand()))
+               for i in range(ng * per)}
+    ls = ParticipantSelector(epsilon=0.0, seed=5, phi=1)
+    vs = VectorizedSelector(epsilon=0.0, seed=5, phi=1)
+    assert ls.fit_communities(W) == vs.fit_communities(W)
+    for _ in range(5):
+        for k in (ng, ng + 2, 2 * ng + 1):
+            pa = ls.select(clients, k, mem_required=0, stage_time_fn=_time_fn)
+            pb = vs.select(clients, k, mem_required=0, stage_time_fn=_time_fn)
+            assert pa == pb
+
+
+def test_vectorized_matches_list_under_memory_filter():
+    """Eq. 12/14: eligibility masks agree and partial-eligibility pools
+    (exhaustion re-permutes) still track the list path exactly."""
+    W, ng, per = _clustered_sim(per=5)
+    clients = {i: ClientInfo(i, memory_bytes=(2.0 if i % 3 else 0.5) * 2**30,
+                             capability=1e9, num_samples=20 + i,
+                             loss_sum=float(i % 7))
+               for i in range(ng * per)}
+    ls = ParticipantSelector(epsilon=0.0, seed=11, phi=1)
+    vs = VectorizedSelector(epsilon=0.0, seed=11, phi=1)
+    ls.fit_communities(W)
+    vs.fit_communities(W)
+    for _ in range(4):
+        pa = ls.select(clients, 8, mem_required=2**30, stage_time_fn=_time_fn)
+        pb = vs.select(clients, 8, mem_required=2**30, stage_time_fn=_time_fn)
+        assert pa == pb
+        assert all(clients[c].memory_bytes >= 2**30 for c in pb)
+
+
+def test_vectorized_infeasible_raises():
+    clients = _fleet()
+    vs = VectorizedSelector(phi=3)
+    with pytest.raises(InfeasibleStageError):
+        vs.select(clients, 4, mem_required=64 * 2**30, stage_time_fn=_time_fn)
+
+
+def test_single_community_excludes_unassigned_clients():
+    """Regression: with one fitted community, the top-k fast path must not
+    pick eligible clients OUTSIDE that community (the list path's pools
+    never contain them) — picks stay identical to the list selector."""
+    clients = {0: ClientInfo(0, 2**33, 1e9, 10, loss_sum=1.0),
+               1: ClientInfo(1, 2**33, 1e9, 10, loss_sum=2.0),
+               2: ClientInfo(2, 2**33, 1e9, 10, loss_sum=9.0)}  # best util
+    for k in (1, 2, 3):
+        ls = ParticipantSelector(epsilon=0.0, seed=0, phi=1)
+        vs = VectorizedSelector(epsilon=0.0, seed=0, phi=1)
+        ls._communities = [[0, 1]]               # client 2 unassigned
+        vs._communities = [[0, 1]]
+        pa = ls.select(clients, k, mem_required=0, stage_time_fn=_time_fn)
+        pb = vs.select(clients, k, mem_required=0, stage_time_fn=_time_fn)
+        assert pa == pb
+        assert 2 not in pb
+
+
+def test_infeasible_round_does_not_desync_rng_streams():
+    """Regression: a caught InfeasibleStageError must not advance the
+    vectorized round counter (the list selector raises before its bandit's
+    next_round), or every later round's permutation stream diverges."""
+    W, ng, per = _clustered_sim(n_groups=4, per=6)
+    clients = {i: ClientInfo(i, 2**30, 1e9, 10 + i, loss_sum=float(i % 5))
+               for i in range(ng * per)}
+    ls = ParticipantSelector(epsilon=0.0, seed=9, phi=2)
+    vs = VectorizedSelector(epsilon=0.0, seed=9, phi=2)
+    ls.fit_communities(W)
+    vs.fit_communities(W)
+    for r in range(6):
+        if r == 2:   # an infeasible stage round in the middle
+            for s in (ls, vs):
+                with pytest.raises(InfeasibleStageError):
+                    s.select(clients, 4, mem_required=2**40,
+                             stage_time_fn=_time_fn)
+            continue
+        pa = ls.select(clients, 4, mem_required=0, stage_time_fn=_time_fn)
+        pb = vs.select(clients, 4, mem_required=0, stage_time_fn=_time_fn)
+        assert pa == pb, r
+
+
+def test_population_roundtrip_and_snapshot():
+    clients = _fleet(17)
+    pop = ClientPopulation.from_infos(clients)
+    assert pop.n == 17
+    assert list(pop.client_ids) == sorted(clients)
+    np.testing.assert_allclose(
+        np.asarray(pop.memory_bytes),
+        [clients[c].memory_bytes for c in sorted(clients)])
+    sel = ParticipantSelector()
+    pop2 = population_from_selector(sel, clients)
+    assert pop2.n_communities == 1
+    pop2.update_loss_sums([0, 3], [5.0, 7.0])
+    assert float(pop2.loss_sum[3]) == 7.0
+
+
+def test_select_arrays_resident_population():
+    """The population-scale entry point: device-resident arrays, explicit
+    round index, coverage of every nonempty community when k >= C."""
+    rng = np.random.RandomState(0)
+    n, n_comm = 500, 8
+    comm = rng.randint(0, n_comm, n)
+    infos = {i: ClientInfo(i, 2**33, 1e9, int(rng.randint(16, 64)),
+                           float(rng.rand())) for i in range(n)}
+    pop = ClientPopulation.from_infos(infos, community_id=comm,
+                                      n_communities=n_comm)
+    vs = VectorizedSelector(epsilon=0.2, seed=1)
+    sel = vs.select_arrays(pop, n_comm * 2, mem_required=0, round_idx=0)
+    assert len(sel) == n_comm * 2
+    assert len(set(comm[sel])) == n_comm          # round-robin coverage
+    assert len(set(sel.tolist())) == len(sel)     # no duplicate picks
+    # last_seen updated for the picked rows only
+    seen = np.asarray(pop.last_seen)
+    assert (seen[sel] == 0).all()
+    assert (np.delete(seen, sel) == -1).all()
+
+
+def test_selector_seed_divergence_regression():
+    """Two selectors with different seeds must actually diverge (the old
+    ``seed + round`` stream made them walk each other's schedules); same
+    seed must reproduce. Holds for both implementations."""
+    W, ng, per = _clustered_sim(n_groups=4, per=6)
+    clients = {i: ClientInfo(i, 2**33, 1e9, 10, loss_sum=1.0)
+               for i in range(ng * per)}
+
+    def picks(selector_cls, seed, rounds=6):
+        s = selector_cls(epsilon=0.0, seed=seed, phi=1)
+        s.fit_communities(W)
+        return [s.select(clients, 3, mem_required=0, stage_time_fn=_time_fn)
+                for _ in range(rounds)]
+
+    for cls in (ParticipantSelector, VectorizedSelector):
+        assert picks(cls, 0) == picks(cls, 0)           # reproducible
+        assert picks(cls, 0) != picks(cls, 1), cls      # seeds diverge
+
+
+def test_gumbel_exploration_diverges_and_covers():
+    """epsilon>0: gumbel-top-k explores (different seeds, different picks)
+    while still covering communities round-robin."""
+    rng = np.random.RandomState(0)
+    n, n_comm = 200, 5
+    comm = rng.randint(0, n_comm, n)
+    infos = {i: ClientInfo(i, 2**33, 1e9, 10, float(rng.rand()))
+             for i in range(n)}
+
+    def run(seed):
+        pop = ClientPopulation.from_infos(infos, community_id=comm,
+                                          n_communities=n_comm)
+        vs = VectorizedSelector(epsilon=0.5, seed=seed)
+        return [tuple(vs.select_arrays(pop, n_comm, mem_required=0,
+                                       round_idx=r)) for r in range(4)]
+
+    a, b = run(0), run(1)
+    assert a != b
+    for picks in a + b:
+        assert len({comm[i] for i in picks}) == n_comm
+
+
+# ---------------------------------------------------------------------------
+# sketch similarity + label propagation vs the dense oracle
+# ---------------------------------------------------------------------------
+
+
+def _planted_histograms(n_groups=4, per=5, num_classes=16, seed=0):
+    rng = np.random.RandomState(seed)
+    hist = np.zeros((n_groups * per, num_classes))
+    for i in range(n_groups * per):
+        g = i // per
+        hist[i, g * 2] = 50 + rng.randint(0, 10)
+        hist[i, g * 2 + 1] = 30
+    hist += rng.rand(*hist.shape)
+    return hist
+
+
+def test_sketch_similarity_approximates_exact_cosine():
+    hist = _planted_histograms()
+    proj = sketch_projection(hist.shape[1], 128, seed=0)
+    sk = np.asarray(label_sketches(hist, proj))
+    h = hist / hist.sum(1, keepdims=True)
+    exact = h @ h.T
+    exact /= (np.linalg.norm(h, axis=1)[:, None] * np.linalg.norm(h, axis=1))
+    approx = sk @ sk.T
+    approx /= np.maximum(np.linalg.norm(sk, axis=1)[:, None]
+                         * np.linalg.norm(sk, axis=1), 1e-12)
+    # absolute distortion is bounded (sparse histograms concentrate slowly)
+    assert np.abs(exact - approx).max() < 0.4
+    # ...but the structure that drives community detection — a wide gap
+    # between in-group and cross-group similarity — survives sketching
+    per = 5
+    grp = np.arange(len(hist)) // per
+    in_group = approx[(grp[:, None] == grp) & ~np.eye(len(hist), dtype=bool)]
+    cross = approx[grp[:, None] != grp]
+    assert in_group.min() > cross.max() + 0.3
+
+
+def test_label_propagation_matches_louvain_on_planted_graph():
+    hist = _planted_histograms()
+    labels, n_comm = sketch_communities(hist, sketch_dim=128,
+                                        num_neighbors=4, seed=0)
+    W = similarity_matrix({i: hist[i] for i in range(len(hist))})
+    oracle = louvain(np.maximum(W, 0))
+    got = [sorted(np.flatnonzero(labels == c).tolist())
+           for c in range(n_comm)]
+    assert sorted(got) == sorted(sorted(c) for c in oracle)
+
+
+def test_label_propagation_respects_separation():
+    """Two groups sharing one class must NOT merge; near-identical
+    distributions must not fragment."""
+    rng = np.random.RandomState(3)
+    n = 60
+    hist = np.zeros((n, 8))
+    grp = np.arange(n) // 30
+    for i in range(n):
+        hist[i, 0] = 30                        # shared class
+        hist[i, 1 + grp[i] * 2] = 60 + rng.randint(0, 10)
+    labels, n_comm = sketch_communities(hist, sketch_dim=64, num_neighbors=6,
+                                        seed=0)
+    assert n_comm == 2
+    for g in (0, 1):
+        assert len(set(labels[grp == g])) == 1
+
+
+def test_topm_neighbors_tiling_matches_single_block():
+    rng = np.random.RandomState(0)
+    vecs = rng.randn(50, 16).astype(np.float32)
+    nb1, w1 = topm_neighbors(vecs, 5, block_rows=50)
+    nb2, w2 = topm_neighbors(vecs, 5, block_rows=7)
+    np.testing.assert_array_equal(np.asarray(nb1), np.asarray(nb2))
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w2), rtol=1e-6)
+
+
+def test_vectorized_selector_drives_smartfreeze_server():
+    """VectorizedSelector is a drop-in for the server's selection duck type."""
+    import jax
+    from repro.data.partition import dirichlet_partition
+    from repro.data.synthetic import SyntheticVision
+    from repro.fl.client import make_client_fleet
+    from repro.fl.server import SmartFreezeServer
+    from repro.models.cnn import CNN, CNNConfig
+
+    sv = SyntheticVision(num_classes=4, image_size=8)
+    train = sv.sample(256, seed=1)
+    parts = dirichlet_partition(train["y"], 8, alpha=1.0, seed=0)
+    clients = make_client_fleet(train, parts, scenario="low", seed=0)
+    cfg = CNNConfig("rn", "resnet", stage_sizes=(1,), stage_channels=(8,),
+                    num_classes=4)
+    model = CNN(cfg)
+    params, state = model.init(jax.random.PRNGKey(0))
+    srv = SmartFreezeServer(model, clients, clients_per_round=4, batch_size=16,
+                            rounds_per_stage=2, fused=False,
+                            selector=VectorizedSelector(seed=0, phi=1),
+                            pace_kwargs=dict(min_rounds=999))
+    out = srv.run(params, state, total_rounds=2)
+    assert out["rounds"] == 2
+    assert all(len(r.selected) == 4 for r in out["history"])
