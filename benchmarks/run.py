@@ -564,6 +564,116 @@ def selector_scale():
          + f";ratio1_allclose={ratio1_ok}")
 
 
+def sim_scale(rounds=18):
+    """Virtual-time simulation core (fl/sim.py): one FederatedLoop under the
+    three aggregation policies on a straggler-heavy fleet.
+
+    Reports, per policy: wall us/round, total *virtual* seconds simulated,
+    virtual-vs-wall speedup (how much faster the simulator runs than the
+    fleet it models), and final accuracy. Asserts the paper's qualitative
+    claim — the deadline policy beats the sync barrier on virtual-clock time
+    while staying within one accuracy point — plus the vectorized time
+    kernel's O(N) scaling at N=100k. Writes benchmarks/BENCH_sim_scale.json.
+    BENCH_SMOKE=1 limits rounds (the CI smoke configuration).
+    """
+    import jax, jax.numpy as jnp
+    from repro.data.partition import iid_partition
+    from repro.data.synthetic import SyntheticVision
+    from repro.fl.client import make_client_fleet
+    from repro.fl.server import FedAvgServer
+    from repro.fl.sim import (AsyncBufferedAggregation, DeadlineAggregation,
+                              FleetTimeModel)
+    from repro.models.cnn import CNN, CNNConfig
+
+    smoke = bool(int(os.environ.get("BENCH_SMOKE", "0")))
+    rounds = 6 if smoke else rounds
+    sv = SyntheticVision(num_classes=4, image_size=16)
+    train = sv.sample(1600, seed=1)
+    test = sv.sample(400, seed=2)
+    # IID equal shards: stragglers differ in CAPABILITY, not data volume, so
+    # the deadline's drops cost redundancy, not coverage (paper §V straggler
+    # scenario)
+    parts = iid_partition(train["y"], 16, seed=0)
+    clients = make_client_fleet(train, parts, scenario="low", seed=0)
+    # straggler-heavy: a quarter of the fleet is 20x slower
+    for c in clients:
+        c.capability = 0.05e9 if c.client_id % 4 == 0 else 1e9
+    cfg = CNNConfig("rn", "resnet", stage_sizes=(1, 1),
+                    stage_channels=(12, 24), num_classes=4)
+    model = CNN(cfg)
+    params, state = model.init(jax.random.PRNGKey(0))
+    # Eq. 6 with a VGG-ish ~50 MFLOPs/sample local step so virtual seconds
+    # are device-realistic (the default |D|/c heuristic is selection-scaled)
+    flops_per_sample = 5e7
+
+    def eval_fn(p, s):
+        logits, _ = model.apply(p, s, jnp.asarray(test["x"]), train=False)
+        return float((jnp.argmax(logits, -1) == jnp.asarray(test["y"])).mean())
+
+    policies = [("sync", "sync"),
+                ("deadline", DeadlineAggregation(factor=1.5)),
+                ("async", AsyncBufferedAggregation(buffer_size=4,
+                                                   concurrency=8))]
+    results = {}
+    for name, pol in policies:
+        tm = FleetTimeModel.from_clients(clients,
+                                         flops_per_sample=flops_per_sample)
+        srv = FedAvgServer(model, clients, clients_per_round=8, batch_size=32,
+                           seed=0, fused=False, aggregation=pol,
+                           time_model=tm)
+        t0 = time.time()
+        out = srv.run(params, state, rounds=rounds)
+        wall = time.time() - t0
+        results[name] = {
+            "wall_s": wall, "wall_us_per_round": wall / rounds * 1e6,
+            "rounds_per_s": rounds / wall,
+            "virtual_s": out["virtual_time"],
+            "virtual_vs_wall": out["virtual_time"] / wall,
+            "final_acc": eval_fn(out["params"], out["state"]),
+            "mean_cohort": float(np.mean([len(r.selected)
+                                          for r in out["history"]])),
+        }
+
+    # vectorized time kernel at population scale (pure O(N) array work)
+    rng = np.random.RandomState(0)
+    n = 10_000 if smoke else 100_000
+
+    class _Stub:
+        def __init__(self, cid, ns, cap):
+            self.client_id, self.num_samples, self.capability = cid, ns, cap
+            self.link_rate = 1e6
+
+    fleet = [_Stub(i, int(s), float(c)) for i, (s, c) in enumerate(
+        zip(rng.randint(32, 512, n), rng.choice([1e9, 5e9], n)))]
+    tm_big = FleetTimeModel.from_clients(fleet,
+                                         flops_per_sample=flops_per_sample)
+    tm_big.payload_bytes = 1e6
+    tm_big.population_times(0).block_until_ready()  # compile
+    kernel_us = _timeit(lambda: tm_big.population_times(1).block_until_ready(),
+                        n=3)
+
+    dl, sy = results["deadline"], results["sync"]
+    out = {"smoke": smoke, "rounds": rounds, "clients": len(clients),
+           "policies": results, "time_kernel_n": n,
+           "time_kernel_us": kernel_us,
+           "deadline_speedup_vs_sync": sy["virtual_s"] / dl["virtual_s"],
+           "acc_gap_sync_vs_deadline": abs(sy["final_acc"] - dl["final_acc"])}
+    path = os.path.join(os.path.dirname(__file__), "BENCH_sim_scale.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    # the acceptance contract: deadline beats sync on the virtual clock on a
+    # straggler-heavy scenario with accuracy within one point
+    assert dl["virtual_s"] < sy["virtual_s"], (dl["virtual_s"], sy["virtual_s"])
+    assert abs(sy["final_acc"] - dl["final_acc"]) <= 0.011, \
+        (sy["final_acc"], dl["final_acc"])
+    _row("sim_scale", results["sync"]["wall_us_per_round"],
+         ";".join(f"{k}:virt={v['virtual_s']:.1f}s;wall={v['wall_s']:.1f}s;"
+                  f"vxw={v['virtual_vs_wall']:.0f}x;acc={v['final_acc']:.3f}"
+                  for k, v in results.items())
+         + f";deadline_speedup={out['deadline_speedup_vs_sync']:.2f}x"
+         + f";time_kernel_N{n}={kernel_us:.0f}us")
+
+
 BENCHES = {}
 
 
@@ -571,7 +681,7 @@ def main() -> None:
     BENCHES.update({f.__name__: f for f in (
         fig10_memory, speedup_time_model, fig9_rlcd, fig2_layer_convergence,
         kernels_microbench, round_engine, tab2_pace_ablation, tab1_fl_accuracy,
-        selector_scale)})
+        selector_scale, sim_scale)})
     names = sys.argv[1:] or list(BENCHES)
     unknown = [n for n in names if n not in BENCHES]
     if unknown:

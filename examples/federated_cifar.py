@@ -1,9 +1,20 @@
 """The paper's testbed end-to-end: SmartFreeze vs vanilla FL on a synthetic
 CIFAR-like task with 20 heterogeneous clients (Dirichlet non-IID, memory +
-compute heterogeneity). Prints round-by-round accuracy and the stage-freeze
-points, plus the Eq.(4) per-stage memory model.
+compute heterogeneity). Prints round-by-round accuracy, the stage-freeze
+points, the Eq.(4) per-stage memory model — and the virtual clock: pass
+``--policy deadline`` (or ``async``) to run the same experiment under
+deadline-based partial aggregation or FedBuff-style buffered async, and
+``--ckpt-dir`` / ``--resume`` to checkpoint every round and continue a
+killed run bit-identically (loss, perturbation and selection series all
+pick up where they left off; under ``async`` the in-flight dispatches are
+not checkpointed, so a resumed run re-dispatches them — sync/deadline are
+the bit-identical policies).
 
 Run:  PYTHONPATH=src python examples/federated_cifar.py [--rounds-per-stage 8]
+      PYTHONPATH=src python examples/federated_cifar.py \
+          --policy deadline --ckpt-dir /tmp/fed_ck        # kill it mid-run
+      PYTHONPATH=src python examples/federated_cifar.py \
+          --policy deadline --ckpt-dir /tmp/fed_ck --resume
 """
 import argparse
 import sys, os
@@ -13,15 +24,27 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.checkpoint import CheckpointManager
 from repro.data.partition import dirichlet_partition
 from repro.data.synthetic import SyntheticVision
 from repro.fl.client import make_client_fleet
 from repro.fl.server import SmartFreezeServer, cnn_stage_memory_bytes
+from repro.fl.sim import (AsyncBufferedAggregation, AvailabilityTrace,
+                          DeadlineAggregation, FleetTimeModel)
 from repro.models.cnn import CNN, CNNConfig
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--rounds-per-stage", type=int, default=8)
 ap.add_argument("--clients", type=int, default=20)
+ap.add_argument("--policy", choices=["sync", "deadline", "async"],
+                default="sync")
+ap.add_argument("--dropout", type=float, default=0.0,
+                help="per-(client, round) mid-round dropout probability")
+ap.add_argument("--link-mbps", type=float, default=0.0,
+                help=">0: uplink rate in MB/s (payload time enters the clock)")
+ap.add_argument("--ckpt-dir", default=None)
+ap.add_argument("--ckpt-every", type=int, default=1)
+ap.add_argument("--resume", action="store_true")
 args = ap.parse_args()
 
 sv = SyntheticVision(num_classes=10, image_size=16)
@@ -44,12 +67,30 @@ def eval_fn(p, s, stage):
     logits, _ = model.apply(p, s, jnp.asarray(test["x"]), train=False)
     return float((jnp.argmax(logits, -1) == jnp.asarray(test["y"])).mean())
 
+policy = {"sync": "sync",
+          "deadline": DeadlineAggregation(factor=1.5),
+          "async": AsyncBufferedAggregation(buffer_size=4)}[args.policy]
+time_model = None
+if args.link_mbps > 0:
+    time_model = FleetTimeModel.from_clients(
+        clients, link_rates=[args.link_mbps * 1e6] * len(clients))
+availability = (AvailabilityTrace(p_dropout=args.dropout)
+                if args.dropout > 0 else None)
+mgr = CheckpointManager(args.ckpt_dir, async_save=False) if args.ckpt_dir else None
+
 srv = SmartFreezeServer(model, clients, clients_per_round=6, local_epochs=1,
                         batch_size=32, rounds_per_stage=args.rounds_per_stage,
+                        aggregation=policy, time_model=time_model,
+                        availability=availability,
                         pace_kwargs=dict(min_rounds=4, mu=2, slope_lambda=2e-2))
-out = srv.run(params, state, eval_fn=eval_fn, eval_every=2)
-print(f"\n{out['rounds']} rounds:")
+out = srv.run(params, state, eval_fn=eval_fn, eval_every=2,
+              ckpt_manager=mgr, ckpt_every=args.ckpt_every if mgr else 0,
+              resume=args.resume)
+print(f"\n{out['rounds']} rounds, {out['virtual_time']:.2e} virtual seconds "
+      f"({args.policy}):")
 for rr in out["history"]:
     acc = f" acc={rr.test_acc:.3f}" if rr.test_acc is not None else ""
     frz = "  << FROZEN" if rr.frozen else ""
-    print(f"  r{rr.round_idx:3d} stage{rr.stage} loss={rr.loss:.3f}{acc}{frz}")
+    drop = f" -{len(rr.dropped)}" if rr.dropped else ""
+    print(f"  r{rr.round_idx:3d} stage{rr.stage} t={rr.virtual_time:8.2e}s "
+          f"loss={rr.loss:.3f}{drop}{acc}{frz}")

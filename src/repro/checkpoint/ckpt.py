@@ -37,6 +37,41 @@ def _leaf_file(path) -> str:
     return "__".join(str(p) for p in path) + ".npy"
 
 
+def pack_ragged(lists) -> Dict[str, np.ndarray]:
+    """A list of int lists as two checkpointable arrays (values + offsets).
+    Shared encoding for fitted selector communities (fl/sim.py and
+    core/selector/vectorized.py serialize through this)."""
+    flat = np.asarray([v for sub in lists for v in sub], np.int64)
+    offsets = np.cumsum([0] + [len(sub) for sub in lists]).astype(np.int64)
+    return {"flat": flat, "offsets": offsets}
+
+
+def unpack_ragged(tree: Dict[str, np.ndarray]) -> List[List[int]]:
+    flat = np.asarray(tree["flat"])
+    offs = np.asarray(tree["offsets"])
+    return [[int(v) for v in flat[offs[i]:offs[i + 1]]]
+            for i in range(len(offs) - 1)]
+
+
+def _json_safe(obj):
+    """Coerce numpy scalars/arrays hiding in metadata to plain JSON types —
+    simulation callers checkpoint virtual clocks / round counters that often
+    arrive as np.float32 / np.int64."""
+    if isinstance(obj, dict):
+        return {str(k): _json_safe(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_json_safe(v) for v in obj]
+    if isinstance(obj, np.bool_):
+        return bool(obj)
+    if isinstance(obj, np.integer):
+        return int(obj)
+    if isinstance(obj, np.floating):
+        return float(obj)
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    return obj
+
+
 def save_checkpoint(ckpt_dir: str, step: int, tree: Any, *,
                     metadata: Optional[Dict] = None) -> str:
     """Atomic synchronous save. Returns the commit marker path."""
@@ -45,7 +80,7 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Any, *,
     if os.path.exists(tmp_dir):
         shutil.rmtree(tmp_dir)
     os.makedirs(tmp_dir, exist_ok=True)
-    manifest = {"step": step, "leaves": [], "metadata": metadata or {}}
+    manifest = {"step": step, "leaves": [], "metadata": _json_safe(metadata or {})}
     for path, leaf in tree_paths(tree):
         arr = np.asarray(jax.device_get(leaf))
         logical_dtype = str(arr.dtype)

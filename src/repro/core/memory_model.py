@@ -271,3 +271,54 @@ def full_model_flops(cfg, batch: int, seq: int) -> float:
 def model_flops_6nd(cfg, batch: int, seq: int) -> float:
     """MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) for §Roofline."""
     return 6.0 * arch_active_param_count(cfg) * batch * seq
+
+
+# ---------------------------------------------------------------------------
+# CNN testbed memory model (Eq. 4 for the vision servers; previously lived in
+# fl/server.py — fl.server re-exports these names for backward compat)
+# ---------------------------------------------------------------------------
+
+
+def cnn_feature_cache_bytes(model, stage: int, num_samples: int,
+                            image_size: int = 32) -> float:
+    """Bytes to hold a client shard's frozen-prefix activations (fp32):
+    the feature map at the stage boundary, one per local sample."""
+    if stage <= 0:
+        return 0.0
+    cfg = model.cfg
+    ch = cfg.stage_channels[stage - 1]
+    if cfg.kind == "vgg":  # maxpool halves after every stage
+        res = max(image_size // (2 ** stage), 1)
+    else:  # resnet: stride-2 at each stage entry except stage 0
+        res = max(image_size // (2 ** (stage - 1)), 1)
+    return float(num_samples) * res * res * ch * 4.0
+
+
+def cnn_stage_memory_bytes(model, stage: int, batch_size: int,
+                           image_size: int = 32, *,
+                           cache_samples: int = 0) -> float:
+    """Eq. (4) for the CNN testbed (fp32). ``cache_samples`` is the feature
+    cache hook: when a client would additionally hold its shard's frozen-
+    prefix activations, the requirement grows by ``cnn_feature_cache_bytes``
+    — the selector/server uses this to decline the cache on memory-poor
+    clients (who fall back to recomputing the prefix)."""
+    cfg = model.cfg
+    res = image_size
+    act = 0.0
+    max_act = 0.0
+    params = 0.0
+    for i, (nb, ch) in enumerate(zip(cfg.stage_sizes, cfg.stage_channels)):
+        r = res // (2 ** i) if cfg.kind == "vgg" else max(res // (2 ** max(i, 0)), 4)
+        a = batch_size * r * r * ch * 4.0 * nb * 2  # convs per stage
+        max_act = max(max_act, a / max(nb, 1))
+        c_in = cfg.stage_channels[max(i - 1, 0)]
+        params += nb * (9 * c_in * ch + 9 * ch * ch) * 4.0
+        if i == stage:
+            act = a
+        if i >= stage:
+            break
+    opt = params * 2.0  # momentum
+    total = 2 * act + params + opt + max_act
+    if cache_samples:
+        total += cnn_feature_cache_bytes(model, stage, cache_samples, image_size)
+    return total

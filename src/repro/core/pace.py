@@ -5,19 +5,32 @@ Block perturbation over an update window Q (Eq. 2):
     P_t^{r,Q} = || sum_{q<Q} W_t^{r-q} || / sum_{q<Q} || W_t^{r-q} ||
 
 The numerator telescopes: sum of the last Q updates == theta^r - theta^{r-Q},
-so the exact sliding window needs only a FIFO of Q parameter snapshots of the
-*active block* (1/T of the model, sharded like the params); the denominator is
-a FIFO of scalar norms. A smoothing window H (Eq. 3) and a least-squares slope
-test (|slope| < Lambda for mu consecutive rounds) gate the freeze.
+so the window state is the ``theta^{r-Q}`` boundary snapshot, the running
+parameters, and a FIFO of scalar update norms — the seed kept Q+1 structured
+pytree snapshot copies; this version stores the window as flat fp32 vectors
+(the exact sliding window provably needs the intermediate iterates too, since
+each becomes a future boundary, but flattening drops the per-leaf tree
+overhead and makes the whole window one checkpointable [W+1, n] array).
+``low_memory=True`` switches to an anchored (hopping) window that keeps only
+the boundary snapshot plus the previous iterate — two block copies total
+instead of Q+1 — at the cost of the window re-anchoring every Q rounds
+(perturbation series approximate, freeze decisions within a round or two on
+converging sequences; property-tested).
+
+A smoothing window H (Eq. 3) and a least-squares slope test
+(|slope| < Lambda for mu consecutive rounds) gate the freeze.
 
 The controller is control-plane: it consumes per-round scalar norms computed
 on-mesh (kernels/block_perturb for the fused norm) and decides on host.
+``state_dict()/load_state_dict()`` serialize the full window + decision
+state as numpy arrays, so a checkpointed federated run resumes with a
+bit-identical perturbation series (fl/sim.py).
 """
 from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, List, Optional
+from typing import Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +47,20 @@ def tree_norm(t) -> float:
     return float(global_norm(t))
 
 
+def _flatten(block_params) -> np.ndarray:
+    """One contiguous fp32 vector per observation (leaf order is the pytree
+    iteration order, stable for a fixed block structure)."""
+    leaves = [np.asarray(l, np.float32).ravel()
+              for l in jax.tree.leaves(block_params)]
+    if not leaves:
+        return np.zeros(0, np.float32)
+    return np.concatenate(leaves) if len(leaves) > 1 else leaves[0].copy()
+
+
+def _norm(v: np.ndarray) -> float:
+    return float(np.sqrt(np.sum(np.square(v, dtype=np.float64))))
+
+
 @dataclass
 class PaceController:
     """One controller instance per SmartFreeze block (the active one)."""
@@ -44,8 +71,11 @@ class PaceController:
     mu: int = 3              # consecutive rounds below threshold
     fit_window: int = 8      # points used for the least-squares fit
     min_rounds: int = 10     # never freeze before this many rounds
+    low_memory: bool = False  # anchored window: 2 block copies instead of Q+1
 
-    _snapshots: Deque = field(default_factory=deque)  # theta^{r-q} FIFO
+    _window: Deque = field(default_factory=deque)      # flat snapshots (exact)
+    _anchor: Optional[np.ndarray] = None               # boundary (low_memory)
+    _prev: Optional[np.ndarray] = None                 # theta^{r-1} (low_memory)
     _update_norms: Deque = field(default_factory=deque)
     _perturbations: List[float] = field(default_factory=list)
     _smoothed: List[float] = field(default_factory=list)
@@ -59,23 +89,41 @@ class PaceController:
 
         Returns the smoothed block perturbation (None until >= 2 rounds).
         """
-        params = jax.tree.map(lambda x: np.asarray(x, np.float32), block_params)
-        if self._snapshots:
-            latest = self._snapshots[-1]
-            upd_norm = _np_norm(_np_sub(params, latest))
-            self._update_norms.append(upd_norm)
+        flat = _flatten(block_params)
+        if self.low_memory:
+            return self._observe_anchored(flat)
+        if self._window:
+            self._update_norms.append(_norm(flat - self._window[-1]))
             if len(self._update_norms) > self.window_q:
                 self._update_norms.popleft()
-        self._snapshots.append(params)
-        if len(self._snapshots) > self.window_q + 1:
-            self._snapshots.popleft()
+        self._window.append(flat)
+        if len(self._window) > self.window_q + 1:
+            self._window.popleft()
         self._rounds += 1
-        if len(self._snapshots) < 2:
+        if len(self._window) < 2:
             return None
         # numerator: telescoped sum of the last <=Q updates
-        num = _np_norm(_np_sub(self._snapshots[-1], self._snapshots[0]))
-        den = sum(self._update_norms) + 1e-12
-        p = num / den
+        num = _norm(self._window[-1] - self._window[0])
+        return self._emit(num, sum(self._update_norms))
+
+    def _observe_anchored(self, flat: np.ndarray) -> Optional[float]:
+        self._rounds += 1
+        if self._prev is None:
+            self._prev = flat
+            self._anchor = flat
+            return None
+        if len(self._update_norms) >= self.window_q:
+            # hop: restart the window one update back, so the perturbation
+            # is defined every round (window length cycles 1..Q)
+            self._anchor = self._prev
+            self._update_norms.clear()
+        self._update_norms.append(_norm(flat - self._prev))
+        self._prev = flat
+        num = _norm(flat - self._anchor)
+        return self._emit(num, sum(self._update_norms))
+
+    def _emit(self, num: float, den: float) -> float:
+        p = num / (den + 1e-12)
         self._perturbations.append(p)
         h = min(self.smooth_h, len(self._perturbations))
         sm = float(np.mean(self._perturbations[-h:]))
@@ -109,16 +157,41 @@ class PaceController:
         return {"perturbation": list(self._perturbations),
                 "smoothed": list(self._smoothed), "rounds": self._rounds}
 
+    # ----- checkpoint/resume (fl/sim.py) -----
 
-def _np_sub(a, b):
-    return jax.tree.map(lambda x, y: x - y, a, b)
+    def state_dict(self) -> Dict[str, np.ndarray]:
+        """Full controller state as numpy arrays (CheckpointManager-ready)."""
+        n = self._window[-1].size if self._window else (
+            self._prev.size if self._prev is not None else 0)
+        out = {
+            "window": (np.stack(self._window) if self._window
+                       else np.zeros((0, n), np.float32)),
+            "anchor": (self._anchor if self._anchor is not None
+                       else np.zeros((0,), np.float32)),
+            "prev": (self._prev if self._prev is not None
+                     else np.zeros((0,), np.float32)),
+            "update_norms": np.asarray(list(self._update_norms), np.float64),
+            "perturbations": np.asarray(self._perturbations, np.float64),
+            "smoothed": np.asarray(self._smoothed, np.float64),
+            "counters": np.asarray([self._below, self._rounds], np.int64),
+        }
+        return out
 
-
-def _np_norm(t) -> float:
-    total = 0.0
-    for leaf in jax.tree.leaves(t):
-        total += float(np.sum(np.square(leaf, dtype=np.float64)))
-    return float(np.sqrt(total))
+    def load_state_dict(self, state: Dict[str, np.ndarray]) -> "PaceController":
+        w = np.asarray(state["window"], np.float32)
+        self._window = deque(list(w))
+        anchor = np.asarray(state["anchor"], np.float32)
+        prev = np.asarray(state["prev"], np.float32)
+        self._anchor = anchor if anchor.size else None
+        self._prev = prev if prev.size else None
+        self._update_norms = deque(
+            float(x) for x in np.asarray(state["update_norms"]))
+        self._perturbations = [float(x)
+                               for x in np.asarray(state["perturbations"])]
+        self._smoothed = [float(x) for x in np.asarray(state["smoothed"])]
+        below, rounds = (int(x) for x in np.asarray(state["counters"]))
+        self._below, self._rounds = below, rounds
+        return self
 
 
 # ---------------------------------------------------------------------------

@@ -74,7 +74,7 @@ class ClientPopulation:
     n_communities: int = 1
     last_seen: jnp.ndarray = None     # [N] i32 round last selected (-1 never)
     ef_residual_norm: jnp.ndarray = None  # [N] f32 error-feedback residual norms
-    _stage_time: Optional[jnp.ndarray] = field(default=None, repr=False)
+    _stage_time: Optional[tuple] = field(default=None, repr=False)  # (key, [N])
 
     def __post_init__(self):
         n = self.n
@@ -113,12 +113,19 @@ class ClientPopulation:
                           else jnp.asarray(community_id, jnp.int32)),
             n_communities=n_communities)
 
-    def stage_time(self) -> jnp.ndarray:
-        """t_t^i = |D_i| / c_i, memoized on device."""
-        if self._stage_time is None:
-            self._stage_time = (self.num_samples.astype(jnp.float32)
-                                / jnp.maximum(self.capability, 1e-9))
-        return self._stage_time
+    def stage_time(self, flops_per_sample: float = 1.0, rho: float = 1.0
+                   ) -> jnp.ndarray:
+        """Eq. 6 over the population via the shared vectorized time kernel
+        (``core.time_model.stage_times_vec``); the default unit-FLOPs form
+        is the selection heuristic t_t^i = |D_i| / c_i. Memoized on device
+        per (flops_per_sample, rho) — per-stage FLOPs recompute correctly."""
+        key = (float(flops_per_sample), float(rho))
+        if self._stage_time is None or self._stage_time[0] != key:
+            from repro.core.time_model import stage_times_vec
+            self._stage_time = (key, stage_times_vec(
+                jnp.float32(flops_per_sample), self.num_samples,
+                self.capability, jnp.float32(rho)))
+        return self._stage_time[1]
 
     def set_communities(self, community_id, n_communities: int):
         self.community_id = jnp.asarray(community_id, jnp.int32)
@@ -297,6 +304,29 @@ class VectorizedSelector:
         self._communities = [np.flatnonzero(comm_id == c).tolist()
                              for c in range(n_comm)]
         return comm_id
+
+    # ----- checkpoint/resume (fl/sim.py serializes through these) -----
+
+    def state_dict(self) -> Dict[str, np.ndarray]:
+        """Round counter + fitted communities as arrays — everything a
+        resumed run needs to continue the per-round ``mix_seed`` RNG streams
+        and community round-robin pick-identically."""
+        from repro.checkpoint.ckpt import pack_ragged
+        out: Dict[str, np.ndarray] = {"round": np.asarray([self._round],
+                                                          np.int64)}
+        if self._communities:
+            ragged = pack_ragged(self._communities)
+            out["comm_flat"] = ragged["flat"]
+            out["comm_offsets"] = ragged["offsets"]
+        return out
+
+    def load_state_dict(self, state: Dict[str, np.ndarray]) -> None:
+        from repro.checkpoint.ckpt import unpack_ragged
+        self._round = int(np.asarray(state["round"])[0])
+        if "comm_flat" in state:
+            self._communities = unpack_ragged(
+                {"flat": state["comm_flat"],
+                 "offsets": state["comm_offsets"]})
 
     # ----- population-scale hot path -----
 

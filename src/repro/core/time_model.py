@@ -7,10 +7,22 @@ T_r(S, t) = max_{i in S} t_t^i              (Eq. 7, synchronous round)
 sustains, reported by the local monitor); ``rho`` a calibration coefficient
 determined offline (paper §IV-C2). The same model drives straggler-aware
 selection and the deadline used for partial aggregation.
+
+Scalar entry points (``client_stage_time`` / ``round_time``) serve the
+list-based control path; the ``*_vec`` kernels below are the vectorized,
+device-resident form used by the virtual-time simulation core
+(``fl/sim.py``) over ``ClientPopulation``-style arrays: per-client compute
+times, heterogeneous uplink times for a payload, and a deterministic
+per-(client, round) lognormal jitter so availability traces replay
+bit-identically across checkpoint/resume.
 """
 from __future__ import annotations
 
 from typing import Dict, Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.core.memory_model import stage_flops, full_model_flops
 
@@ -24,7 +36,15 @@ def client_stage_time(cfg, stage: int, num_samples: int, capability_flops: float
 
 def round_time(cfg, stage: int, clients: Sequence[Dict], *,
                batch: int = 1, seq: int = 1, rho: float = 1.0) -> float:
-    """Eq. (7): synchronous round time = slowest selected client."""
+    """Eq. (7): synchronous round time = slowest selected client.
+
+    An empty cohort (reachable when every selected client drops out, or via
+    ``InfeasibleStageError`` recovery paths that retry with no survivors)
+    contributes no wall-clock: the round is a no-op and costs 0.0 rather
+    than raising ``max() arg is an empty sequence``."""
+    clients = list(clients)
+    if not clients:
+        return 0.0
     return max(client_stage_time(cfg, stage, c["num_samples"], c["capability"],
                                  batch=batch, seq=seq, rho=rho)
                for c in clients)
@@ -36,3 +56,53 @@ def stage_speedup(cfg, stage: int, *, batch: int = 1, seq: int = 128) -> float:
     full = full_model_flops(cfg, batch, seq)
     st = stage_flops(cfg, stage, batch, seq)["total"]
     return full / st
+
+
+# ---------------------------------------------------------------------------
+# Vectorized time kernels (fl/sim.py's device-resident hot path)
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def stage_times_vec(flops_per_sample, num_samples, capability, rho=1.0):
+    """Eq. (6) over client arrays: [N] seconds of local compute.
+
+    ``flops_per_sample`` may be a scalar (one stage for the whole fleet) or
+    an [N] array (per-client sub-models, e.g. DepthFL/HeteroFL)."""
+    return (rho * flops_per_sample * num_samples.astype(jnp.float32)
+            / jnp.maximum(capability, 1e-9))
+
+
+@jax.jit
+def uplink_times_vec(payload_bytes, link_rate):
+    """[N] seconds to put ``payload_bytes`` on each client's uplink.
+    ``jnp.inf`` link rates (the default "free network" model) cost 0."""
+    rate = jnp.maximum(link_rate, 1e-9)
+    t = payload_bytes / rate
+    return jnp.where(jnp.isinf(link_rate), 0.0, t)
+
+
+def completion_jitter(n: int, seed: int, round_idx: int,
+                      sigma: float) -> np.ndarray:
+    """[n] multiplicative lognormal jitter, deterministic per
+    (seed, round) — replays identically across checkpoint/resume, which is
+    what keeps restored virtual-time trajectories bit-identical."""
+    if sigma <= 0.0:
+        return np.ones(n, np.float32)
+    rng = np.random.RandomState((seed * 1_000_003 + round_idx) % (2 ** 32))
+    return np.exp(rng.randn(n).astype(np.float32) * sigma
+                  - 0.5 * sigma * sigma)
+
+
+@jax.jit
+def completion_times_vec(compute_s, uplink_s, jitter):
+    """Per-client round completion time: jittered compute + uplink."""
+    return compute_s * jitter + uplink_s
+
+
+def cohort_round_time(times: Sequence[float]) -> float:
+    """Eq. (7) over precomputed completion times; empty cohort -> 0.0."""
+    times = np.asarray(list(times), np.float64)
+    if times.size == 0:
+        return 0.0
+    return float(times.max())

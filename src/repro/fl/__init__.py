@@ -1,5 +1,8 @@
 from repro.fl.client import SimClient, make_client_fleet
 from repro.fl.engine import (RoundEngine, make_fused_round,
                              make_lm_cached_fed_round_step, weighted_avg)
+from repro.fl.sim import (AsyncBufferedAggregation, AvailabilityTrace,
+                          DeadlineAggregation, FederatedLoop, FleetTimeModel,
+                          RoundRecord, SyncAggregation)
 from repro.fl.server import SmartFreezeServer, FedAvgServer, RoundResult
 from repro.fl.compression import topk_compress, topk_decompress, ErrorFeedback

@@ -10,11 +10,17 @@ Oort         — utility-based selection (stat util x time penalty).
 Each returns the same history format as the servers in fl/server.py so the
 benchmark harness plots them together (paper Figs. 7-8 / Table I).
 
-Local training runs through ``fl/engine.py``: homogeneous baselines fuse
-the whole cohort into one dispatch; DepthFL/HeteroFL fuse per depth/scale
-group (clients within a group share sub-model shapes) and combine the group
-aggregates by total dataset weight — algebraically identical to the seed's
-per-client aggregation.
+Local training runs through ``fl/engine.py`` (homogeneous baselines fuse the
+whole cohort into one dispatch; DepthFL/HeteroFL fuse per depth/scale group)
+and round orchestration through ``fl/sim.py``'s ``FederatedLoop`` — the same
+virtual-time loop the servers use, so every baseline accepts ``aggregation``
+("sync" Eq. 7 barrier or "deadline" partial aggregation; the submodel
+baselines have no single-model async hooks), ``time_model`` and
+``availability`` and reports per-round virtual durations in its history.
+TiFL/Oort charge their full-model payload against client uplinks like the
+servers do; DepthFL/HeteroFL cohorts upload per-client *submodels*, so
+callers wanting uplink-time accounting there pass a ``time_model`` with
+``payload_bytes`` set to their scenario's effective payload.
 """
 from __future__ import annotations
 
@@ -26,11 +32,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import freezing_cnn as fz
+from repro.core.memory_model import cnn_stage_memory_bytes
 from repro.core.output_module import cnn_fc_only_apply, cnn_fc_only_init
 from repro.fl.client import SimClient
-from repro.fl.engine import RoundEngine
-from repro.fl.server import (FedAvgServer, RoundResult, _weighted_avg,
-                             cnn_stage_memory_bytes)
+from repro.fl.engine import RoundEngine, weighted_avg
+from repro.fl.server import FedAvgServer, RoundResult, _mean_loss
+from repro.fl.sim import FederatedLoop, FleetTimeModel
 from repro.models.cnn import CNN, CNNConfig
 from repro.models.module import PFac
 from repro.optim import sgd
@@ -45,6 +52,18 @@ def scaled_config(cfg: CNNConfig, scale: float) -> CNNConfig:
     chans = tuple(max(int(c * scale), 4) for c in cfg.stage_channels)
     return dataclasses.replace(cfg, stage_channels=chans,
                                name=f"{cfg.name}_x{scale:g}")
+
+
+def _run_loop(clients_by_id, select_fn, train_fn, on_round, rounds, *,
+              aggregation="sync", time_model=None, availability=None):
+    """One-liner over ``FederatedLoop`` shared by the baseline runners."""
+    loop = FederatedLoop(select_fn=select_fn, train_fn=train_fn,
+                         clients=clients_by_id,
+                         client_ids=list(clients_by_id),
+                         aggregation=aggregation, time_model=time_model,
+                         availability=availability, on_round=on_round)
+    loop.run(rounds)
+    return loop
 
 
 # ---------------------------------------------------------------------------
@@ -104,7 +123,8 @@ def run_exclusivefl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
 def run_depthfl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
                 batch_size: int = 32, clients_per_round: int = 10,
                 eval_fn=None, seed: int = 0, local_epochs: int = 1,
-                fused: bool = True, compress_ratio=None) -> Dict:
+                fused: bool = True, compress_ratio=None,
+                aggregation="sync", time_model=None, availability=None) -> Dict:
     """Depth-scaled submodels: client c trains stages [0..d_c) + aux head."""
     model = CNN(cfg)
     n_stages = len(cfg.stage_sizes)
@@ -141,16 +161,21 @@ def run_depthfl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
 
     engines = {d: make_engine(d) for d in range(n_stages)}
     rng = np.random.RandomState(seed)
-    history = []
-    for r in range(rounds):
-        sel = list(rng.choice([c.client_id for c in clients],
-                              size=min(clients_per_round, len(clients)), replace=False))
+    history: List[RoundResult] = []
+    box = {"params": params, "state": state}
+
+    def select_fn(r, avail):
+        return list(rng.choice(avail, size=min(clients_per_round, len(avail)),
+                               replace=False))
+
+    def train_fn(sel, r, sequential=None):
+        params, state = box["params"], box["state"]
         # one fused dispatch per depth group (shapes are homogeneous within)
         by_depth: Dict[int, List[int]] = {}
         for cid in sel:
             by_depth.setdefault(depths[cid], []).append(cid)
         group_out: Dict[int, Dict] = {}
-        losses_all = []
+        losses: Dict[int, float] = {}
         for d, cids in by_depth.items():
             sub = {k: params[k] for k in params if k != "fc"}
             if d == n_stages - 1:
@@ -158,10 +183,11 @@ def run_depthfl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
             else:
                 sub["aux"] = aux[d]
             p_g, s_g, l_g = engines[d].run_round(clients_by_id, cids, sub,
-                                                 state, r)
+                                                 state, r,
+                                                 sequential=sequential)
             W_g = float(sum(clients_by_id[c].num_samples for c in cids))
             group_out[d] = {"params": p_g, "state": s_g, "weight": W_g}
-            losses_all.extend(l_g.values())
+            losses.update(l_g)
         # per-stage aggregation over depth groups that trained the stage
         new_params = dict(params)
         new_params["stages"] = dict(new_params["stages"])
@@ -171,25 +197,36 @@ def run_depthfl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
                 continue
             ws = np.asarray([g["weight"] for g in having])
             ws = ws / ws.sum()
-            new_params["stages"][f"stage{s}"] = _weighted_avg(
+            new_params["stages"][f"stage{s}"] = weighted_avg(
                 [g["params"]["stages"][f"stage{s}"] for g in having], ws)
         ws_all = np.asarray([g["weight"] for g in group_out.values()])
         ws_all = ws_all / ws_all.sum()
         if cfg.kind == "resnet":
-            new_params["stem"] = _weighted_avg(
+            new_params["stem"] = weighted_avg(
                 [g["params"]["stem"] for g in group_out.values()], ws_all)
         if n_stages - 1 in group_out:
             new_params["fc"] = group_out[n_stages - 1]["params"]["fc"]
         for d in range(n_stages - 1):
             if d in group_out:
                 aux[d] = group_out[d]["params"]["aux"]
-        params = new_params
-        state = _weighted_avg([g["state"] for g in group_out.values()], ws_all)
-        rr = RoundResult(r, n_stages - 1, float(np.mean(losses_all)), selected=sel)
-        if eval_fn is not None and r % 10 == 0:
-            rr.test_acc = eval_fn(model, params, state)
+        box["params"] = new_params
+        box["state"] = weighted_avg([g["state"] for g in group_out.values()],
+                                    ws_all)
+        return losses
+
+    def on_round(rec):
+        rr = RoundResult(rec.round_idx, n_stages - 1, _mean_loss(rec.losses),
+                         selected=rec.selected, duration=rec.duration,
+                         virtual_time=rec.t_end, dropped=rec.dropped)
+        if eval_fn is not None and rec.round_idx % 10 == 0:
+            rr.test_acc = eval_fn(model, box["params"], box["state"])
         history.append(rr)
-    return {"params": params, "state": state, "history": history,
+        return False
+
+    _run_loop(clients_by_id, select_fn, train_fn, on_round, rounds,
+              aggregation=aggregation, time_model=time_model,
+              availability=availability)
+    return {"params": box["params"], "state": box["state"], "history": history,
             "participation": float(participation), "model": model}
 
 
@@ -210,7 +247,8 @@ def _slice_like(full, small):
 def run_heterofl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
                  batch_size: int = 32, clients_per_round: int = 10,
                  eval_fn=None, seed: int = 0, local_epochs: int = 1,
-                 fused: bool = True, compress_ratio=None) -> Dict:
+                 fused: bool = True, compress_ratio=None,
+                 aggregation="sync", time_model=None, availability=None) -> Dict:
     model_full = CNN(cfg)
     params_full, state_full = model_full.init(jax.random.PRNGKey(seed))
     clients_by_id = {c.client_id: c for c in clients}
@@ -237,11 +275,16 @@ def run_heterofl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
 
     engines = {s: make_engine(s) for s in _HFL_SCALES}
     rng = np.random.RandomState(seed)
-    history = []
+    history: List[RoundResult] = []
     n_stages = len(cfg.stage_sizes)
-    for r in range(rounds):
-        sel = list(rng.choice([c.client_id for c in clients],
-                              size=min(clients_per_round, len(clients)), replace=False))
+    box = {"params": params_full, "state": state_full}
+
+    def select_fn(r, avail):
+        return list(rng.choice(avail, size=min(clients_per_round, len(avail)),
+                               replace=False))
+
+    def train_fn(sel, r, sequential=None):
+        params_full, state_full = box["params"], box["state"]
         by_scale: Dict[float, List[int]] = {}
         for cid in sel:
             by_scale.setdefault(scale_of[cid], []).append(cid)
@@ -250,16 +293,17 @@ def run_heterofl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
         cnt = jax.tree.map(lambda x: np.zeros(x.shape, np.float64), params_full)
         acc_s = jax.tree.map(lambda x: np.zeros(x.shape, np.float64), state_full)
         cnt_s = jax.tree.map(lambda x: np.zeros(x.shape, np.float64), state_full)
-        losses_all = []
+        losses: Dict[int, float] = {}
         for sc, cids in by_scale.items():
             sub_shape, sub_state_shape = jax.eval_shape(
                 lambda: models[sc].init(jax.random.PRNGKey(0)))
             sub = jax.tree.map(_slice_like, params_full, sub_shape)
             sub_st = jax.tree.map(_slice_like, state_full, sub_state_shape)
             p_g, s_g, l_g = engines[sc].run_round(clients_by_id, cids, sub,
-                                                  sub_st, r)
+                                                  sub_st, r,
+                                                  sequential=sequential)
             W_g = float(sum(clients_by_id[c].num_samples for c in cids))
-            losses_all.extend(l_g.values())
+            losses.update(l_g)
 
             def add(a, c_, small):
                 sl = tuple(slice(0, s) for s in small.shape)
@@ -275,13 +319,23 @@ def run_heterofl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
             out[mask] = a[mask] / c_[mask]
             return jnp.asarray(out, full.dtype)
 
-        params_full = jax.tree.map(finalize, acc, cnt, params_full)
-        state_full = jax.tree.map(finalize, acc_s, cnt_s, state_full)
-        rr = RoundResult(r, n_stages - 1, float(np.mean(losses_all)), selected=sel)
-        if eval_fn is not None and r % 10 == 0:
-            rr.test_acc = eval_fn(model_full, params_full, state_full)
+        box["params"] = jax.tree.map(finalize, acc, cnt, params_full)
+        box["state"] = jax.tree.map(finalize, acc_s, cnt_s, state_full)
+        return losses
+
+    def on_round(rec):
+        rr = RoundResult(rec.round_idx, n_stages - 1, _mean_loss(rec.losses),
+                         selected=rec.selected, duration=rec.duration,
+                         virtual_time=rec.t_end, dropped=rec.dropped)
+        if eval_fn is not None and rec.round_idx % 10 == 0:
+            rr.test_acc = eval_fn(model_full, box["params"], box["state"])
         history.append(rr)
-    return {"params": params_full, "state": state_full, "history": history,
+        return False
+
+    _run_loop(clients_by_id, select_fn, train_fn, on_round, rounds,
+              aggregation=aggregation, time_model=time_model,
+              availability=availability)
+    return {"params": box["params"], "state": box["state"], "history": history,
             "participation": 1.0, "model": model_full}
 
 
@@ -314,6 +368,9 @@ def run_tifl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
     local_epochs = kw.pop("local_epochs", 1)
     fused = kw.pop("fused", True)
     compress_ratio = kw.pop("compress_ratio", None)
+    aggregation = kw.pop("aggregation", "sync")
+    time_model = kw.pop("time_model", None)
+    availability = kw.pop("availability", None)
     if kw:
         raise TypeError(f"run_tifl: unknown kwargs {sorted(kw)}")
     # ONE engine reused across rounds (the seed rebuilt a jitted step per
@@ -323,27 +380,49 @@ def run_tifl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
                          fused=fused, compress_ratio=compress_ratio)
     n_stages = len(cfg.stage_sizes)
     rng = np.random.RandomState(seed)
-    # monkey-select: restrict each round to one tier
-    history = []
-    for r in range(rounds):
-        tier = [t for t in tiers.values() if t][r % sum(1 for t in tiers.values() if t)]
-        sel = list(rng.choice(tier, size=min(clients_per_round, len(tier)),
-                              replace=False))
-        params, state, losses = engine.run_round(clients_by_id, sel, params,
-                                                 state, r)
-        rr = RoundResult(r, n_stages - 1, float(np.mean(list(losses.values()))),
-                         selected=sel)
-        if eval_fn is not None and r % 10 == 0:
-            rr.test_acc = eval_fn(model, params, state)
+    history: List[RoundResult] = []
+    box = {"params": params, "state": state}
+
+    def select_fn(r, avail):
+        # restrict each round to one tier (round-robin over non-empty tiers)
+        avail_set = set(avail)
+        live = [t for t in tiers.values() if t]
+        tier = [c for c in live[r % len(live)] if c in avail_set]
+        if not tier:
+            return []
+        return list(rng.choice(tier, size=min(clients_per_round, len(tier)),
+                               replace=False))
+
+    def train_fn(sel, r, sequential=None):
+        box["params"], box["state"], losses = engine.run_round(
+            clients_by_id, sel, box["params"], box["state"], r,
+            sequential=sequential)
+        return losses
+
+    def on_round(rec):
+        rr = RoundResult(rec.round_idx, n_stages - 1, _mean_loss(rec.losses),
+                         selected=rec.selected, duration=rec.duration,
+                         virtual_time=rec.t_end, dropped=rec.dropped)
+        if eval_fn is not None and rec.round_idx % 10 == 0:
+            rr.test_acc = eval_fn(model, box["params"], box["state"])
         history.append(rr)
-    return {"params": params, "state": state, "history": history,
+        return False
+
+    time_model = (dataclasses.replace(time_model) if time_model is not None
+                  else FleetTimeModel.from_clients(clients_by_id))
+    time_model.payload_bytes = engine.per_client_uplink_bytes(params)
+    _run_loop(clients_by_id, select_fn, train_fn, on_round, rounds,
+              aggregation=aggregation, time_model=time_model,
+              availability=availability)
+    return {"params": box["params"], "state": box["state"], "history": history,
             "participation": len(eligible) / len(clients), "model": model}
 
 
 def run_oort(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
              batch_size: int = 32, clients_per_round: int = 10,
              eval_fn=None, seed: int = 0, local_epochs: int = 1,
-             fused: bool = True, compress_ratio=None) -> Dict:
+             fused: bool = True, compress_ratio=None,
+             aggregation="sync", time_model=None, availability=None) -> Dict:
     from repro.core.selector.bandit import UtilBandit
 
     model = CNN(cfg)
@@ -361,23 +440,39 @@ def run_oort(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
     engine = RoundEngine(loss_fn=full_loss, optimizer=sgd(0.05),
                          batch_size=batch_size, local_epochs=local_epochs,
                          fused=fused, compress_ratio=compress_ratio)
-    history = []
+    history: List[RoundResult] = []
     n_stages = len(cfg.stage_sizes)
-    for r in range(rounds):
-        sel = bandit.pick([c.client_id for c in eligible],
-                          min(clients_per_round, len(eligible)))
-        params, state, losses = engine.run_round(clients_by_id, list(sel),
-                                                 params, state, r)
+    box = {"params": params, "state": state}
+
+    def select_fn(r, avail):
+        return list(bandit.pick(avail, min(clients_per_round, len(avail))))
+
+    def train_fn(sel, r, sequential=None):
+        box["params"], box["state"], losses = engine.run_round(
+            clients_by_id, sel, box["params"], box["state"], r,
+            sequential=sequential)
         for cid, loss_i in losses.items():
             c = clients_by_id[cid]
             # Oort stat util: |D_i| sqrt(mean loss^2) - time penalty
             t_i = c.num_samples / c.capability
             bandit.update(cid, c.num_samples * np.sqrt(loss_i ** 2) - 0.1 * t_i)
         bandit.next_round()
-        rr = RoundResult(r, n_stages - 1, float(np.mean(list(losses.values()))),
-                         selected=list(sel))
-        if eval_fn is not None and r % 10 == 0:
-            rr.test_acc = eval_fn(model, params, state)
+        return losses
+
+    def on_round(rec):
+        rr = RoundResult(rec.round_idx, n_stages - 1, _mean_loss(rec.losses),
+                         selected=rec.selected, duration=rec.duration,
+                         virtual_time=rec.t_end, dropped=rec.dropped)
+        if eval_fn is not None and rec.round_idx % 10 == 0:
+            rr.test_acc = eval_fn(model, box["params"], box["state"])
         history.append(rr)
-    return {"params": params, "state": state, "history": history,
+        return False
+
+    time_model = (dataclasses.replace(time_model) if time_model is not None
+                  else FleetTimeModel.from_clients(clients_by_id))
+    time_model.payload_bytes = engine.per_client_uplink_bytes(params)
+    _run_loop(clients_by_id, select_fn, train_fn, on_round, rounds,
+              aggregation=aggregation, time_model=time_model,
+              availability=availability)
+    return {"params": box["params"], "state": box["state"], "history": history,
             "participation": len(eligible) / len(clients), "model": model}

@@ -45,6 +45,7 @@ class SimClient:
     memory_bytes: float
     capability: float
     seed: int = 0
+    link_rate: float = float("inf")   # uplink bytes/s (inf = free network)
     _head_grad: Optional[np.ndarray] = None
 
     @property
@@ -106,8 +107,14 @@ def fleet_population(clients: List[SimClient], *, community_id=None,
 
 
 def make_client_fleet(data: Dict[str, np.ndarray], parts: List[np.ndarray], *,
-                      scenario: str = "low", seed: int = 0) -> List[SimClient]:
-    """Build a heterogeneous fleet from a dataset + index partition."""
+                      scenario: str = "low", seed: int = 0,
+                      link_rate_pool: Optional[List[float]] = None
+                      ) -> List[SimClient]:
+    """Build a heterogeneous fleet from a dataset + index partition.
+
+    ``link_rate_pool``: optional uplink rates (bytes/s) drawn per client —
+    feeds ``fl.sim.FleetTimeModel`` so compressed-uplink payloads translate
+    into heterogeneous communication time. Default: free network (inf)."""
     rng = np.random.RandomState(seed)
     mem_pool = HIGH_CONTENTION_GB if scenario == "high" else LOW_CONTENTION_GB
     clients = []
@@ -117,5 +124,7 @@ def make_client_fleet(data: Dict[str, np.ndarray], parts: List[np.ndarray], *,
             client_id=cid, data=local,
             memory_bytes=float(rng.choice(mem_pool)) * 2**30,
             capability=float(rng.choice(CAPABILITY_TIERS)),
-            seed=seed + cid))
+            seed=seed + cid,
+            link_rate=(float(rng.choice(link_rate_pool))
+                       if link_rate_pool else float("inf"))))
     return clients

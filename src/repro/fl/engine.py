@@ -347,6 +347,36 @@ class RoundEngine:
         row = self._res_row[cid]
         return [p[row] for p in self._res_pool]
 
+    def ef_state(self) -> Optional[Dict[str, np.ndarray]]:
+        """Error-feedback residual pools + client->row map as checkpointable
+        arrays (None when compression is off / nothing carried yet)."""
+        if not self._res_pool:
+            return None
+        cids = sorted(self._res_row)
+        return {"rows_ids": np.asarray(cids, np.int64),
+                "rows_idx": np.asarray([self._res_row[c] for c in cids],
+                                       np.int64),
+                **{f"pool{i}": np.asarray(p)
+                   for i, p in enumerate(self._res_pool)}}
+
+    def load_ef_state(self, tree: Dict[str, np.ndarray]) -> None:
+        """Restore ``ef_state`` output — resumed compressed runs carry the
+        exact per-client un-transmitted residual signal forward."""
+        self._res_row = {int(c): int(i) for c, i in
+                         zip(np.asarray(tree["rows_ids"]),
+                             np.asarray(tree["rows_idx"]))}
+        pools = []
+        i = 0
+        while f"pool{i}" in tree:
+            pools.append(jnp.asarray(tree[f"pool{i}"], jnp.float32))
+            i += 1
+        self._res_pool = pools
+
+    def per_client_uplink_bytes(self, params) -> int:
+        """One client's (index, value) payload for the current stage — what
+        the time model charges against each client's uplink rate."""
+        return self._uplink_bytes(params, 1)
+
     def residual_norms(self) -> Dict[int, float]:
         """Per-client ||error-feedback residual||_2 — feeds
         ``ClientPopulation.ef_residual_norm`` for selection policies that

@@ -9,13 +9,22 @@ SmartFreezeServer runs the full paper pipeline end to end:
       perturbation and freezes the stage when converged;
   (4) model growth until the full model is trained.
 
-Round execution is delegated to ``fl/engine.py``: one fused
-vmap-over-clients dispatch per round plus a frozen-prefix feature cache
-(declined per client via the memory-model hook below). The
-deadline/straggler path keeps the sequential ``fused=False`` escape hatch.
-``compress_ratio`` turns on the engine's in-graph top-k + error-feedback
-uplink (see fl/compression.py); per-round payloads land in
-``RoundResult.uplink_bytes``.
+Round execution is delegated to ``fl/engine.py`` (one fused
+vmap-over-clients dispatch per round plus the frozen-prefix feature cache),
+and round *orchestration* to ``fl/sim.py``: both servers are hook bundles
+over the virtual-time ``FederatedLoop``, so they run under any aggregation
+policy — ``sync`` (Eq. 7 barrier), ``deadline`` (partial aggregation over
+clients finishing before T_dl; the legacy ``deadline_factor`` knob maps
+onto it), or ``async``/FedBuff (staleness-weighted buffered updates) — with
+per-round virtual-clock accounting, availability/dropout traces, and
+heterogeneous link rates via ``FleetTimeModel``.
+
+Full-experiment checkpoint/resume rides on ``CheckpointManager``
+(``run(..., ckpt_manager=..., ckpt_every=..., resume=True)``): the pace
+controller window, selector/bandit streams, error-feedback residual pools,
+``_last_loss`` table and the virtual clock all serialize, so a restored
+SmartFreeze run continues bit-identically — including across stage-freeze
+boundaries.
 
 ``selector`` accepts either the list-based ``ParticipantSelector`` or the
 population-scale ``core.selector.vectorized.VectorizedSelector`` — both
@@ -25,22 +34,32 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import freezing_cnn as fz
+from repro.core.memory_model import (cnn_feature_cache_bytes,
+                                     cnn_stage_memory_bytes)
 from repro.core.pace import PaceController
 from repro.core.selector import ParticipantSelector
+from repro.core.selector.selection import InfeasibleStageError
 from repro.core.selector.similarity import similarity_matrix
 from repro.fl.client import SimClient
 from repro.fl.engine import RoundEngine, weighted_avg
+from repro.fl.sim import (AvailabilityTrace, DeadlineAggregation,
+                          FederatedLoop, FleetTimeModel, SyncAggregation,
+                          load_selector_state, pack_float_map,
+                          pack_rng_state, resolve_policy, selector_state_tree,
+                          tree_like, unpack_float_map, unpack_rng_state)
 from repro.models.cnn import CNN
 from repro.optim import Optimizer, sgd
 
-_weighted_avg = weighted_avg  # baselines import this name
+__all__ = ["SmartFreezeServer", "FedAvgServer", "RoundResult",
+           "cnn_stage_memory_bytes", "cnn_feature_cache_bytes",
+           "weighted_avg"]
 
 
 @dataclass
@@ -53,51 +72,13 @@ class RoundResult:
     perturbation: Optional[float] = None
     frozen: bool = False
     uplink_bytes: Optional[int] = None   # cohort uplink payload this round
+    duration: Optional[float] = None     # virtual seconds this round took
+    virtual_time: Optional[float] = None  # virtual clock at round end
+    dropped: List[int] = field(default_factory=list)  # deadline/dropout
 
 
-def cnn_feature_cache_bytes(model: CNN, stage: int, num_samples: int,
-                            image_size: int = 32) -> float:
-    """Bytes to hold a client shard's frozen-prefix activations (fp32):
-    the feature map at the stage boundary, one per local sample."""
-    if stage <= 0:
-        return 0.0
-    cfg = model.cfg
-    ch = cfg.stage_channels[stage - 1]
-    if cfg.kind == "vgg":  # maxpool halves after every stage
-        res = max(image_size // (2 ** stage), 1)
-    else:  # resnet: stride-2 at each stage entry except stage 0
-        res = max(image_size // (2 ** (stage - 1)), 1)
-    return float(num_samples) * res * res * ch * 4.0
-
-
-def cnn_stage_memory_bytes(model: CNN, stage: int, batch_size: int,
-                           image_size: int = 32, *,
-                           cache_samples: int = 0) -> float:
-    """Eq. (4) for the CNN testbed (fp32). ``cache_samples`` is the feature
-    cache hook: when a client would additionally hold its shard's frozen-
-    prefix activations, the requirement grows by ``cnn_feature_cache_bytes``
-    — the selector/server uses this to decline the cache on memory-poor
-    clients (who fall back to recomputing the prefix)."""
-    cfg = model.cfg
-    res = image_size
-    act = 0.0
-    max_act = 0.0
-    params = 0.0
-    for i, (nb, ch) in enumerate(zip(cfg.stage_sizes, cfg.stage_channels)):
-        r = res // (2 ** i) if cfg.kind == "vgg" else max(res // (2 ** max(i, 0)), 4)
-        a = batch_size * r * r * ch * 4.0 * nb * 2  # convs per stage
-        max_act = max(max_act, a / max(nb, 1))
-        c_in = cfg.stage_channels[max(i - 1, 0)]
-        params += nb * (9 * c_in * ch + 9 * ch * ch) * 4.0
-        if i == stage:
-            act = a
-        if i >= stage:
-            break
-    opt = params * 2.0  # momentum
-    total = 2 * act + params + opt + max_act
-    if cache_samples:
-        total += cnn_feature_cache_bytes(model, stage, cache_samples, image_size)
-    return total
+def _mean_loss(losses: Dict[int, float]) -> float:
+    return float(np.mean(list(losses.values()))) if losses else float("nan")
 
 
 class SmartFreezeServer:
@@ -109,7 +90,10 @@ class SmartFreezeServer:
                  op_kind: str = "conv", selector: Optional[ParticipantSelector] = None,
                  deadline_factor: float = 0.0, seed: int = 0,
                  fused: bool = True, cache_features: bool = True,
-                 compress_ratio: Optional[float] = None):
+                 compress_ratio: Optional[float] = None,
+                 aggregation: Union[str, object, None] = None,
+                 time_model: Optional[FleetTimeModel] = None,
+                 availability: Optional[AvailabilityTrace] = None):
         self.model = model
         self.clients = {c.client_id: c for c in clients}
         self.optimizer_fn = optimizer_fn
@@ -125,9 +109,19 @@ class SmartFreezeServer:
         self.fused = fused
         self.cache_features = cache_features
         self.compress_ratio = compress_ratio
+        self.aggregation = aggregation
+        self.time_model = time_model
+        self.availability = availability
         self.history: List[RoundResult] = []
         self._last_loss: Dict[int, float] = {}
         self.image_size = int(next(iter(self.clients.values())).data["x"].shape[1])
+
+    def _policy(self):
+        if self.aggregation is not None:
+            return resolve_policy(self.aggregation)
+        if self.deadline_factor > 0:
+            return DeadlineAggregation(factor=self.deadline_factor)
+        return SyncAggregation()
 
     # ----- bootstrap: similarity from output-layer gradients (Eq. 8) -----
 
@@ -178,22 +172,52 @@ class SmartFreezeServer:
                     cache_samples=c.num_samples)
                 for cid, c in self.clients.items()}
 
-    # ----- main loop -----
+    # ----- main loop (one FederatedLoop per stage) -----
 
     def run(self, params, state, *, eval_fn: Optional[Callable] = None,
             eval_every: int = 10, total_rounds: Optional[int] = None,
-            schedule: Optional[List[int]] = None) -> Dict:
-        """schedule: optional fixed rounds-per-stage (pace-controller ablation)."""
+            schedule: Optional[List[int]] = None,
+            ckpt_manager=None, ckpt_every: int = 0,
+            resume: bool = False) -> Dict:
+        """schedule: optional fixed rounds-per-stage (pace-controller ablation).
+
+        ``ckpt_manager``/``ckpt_every``: checkpoint the full experiment state
+        every N completed rounds (and at stage freezes); ``resume=True``
+        restores the latest committed checkpoint and continues the loss /
+        perturbation / selection series bit-identically."""
         model = self.model
         n_stages = len(model.cfg.stage_sizes)
-        sim = self.bootstrap_similarity(params, state)
-        self.selector.fit_communities(sim)
-        round_idx = 0
         budget = total_rounds or self.rounds_per_stage * n_stages
+        policy = self._policy()
+        clock = 0.0
+        round_idx = 0
+        start_stage = 0
+        restored = None
+        if resume and ckpt_manager is not None:
+            try:
+                restored = ckpt_manager.restore()
+            except FileNotFoundError:
+                restored = None
+        if restored is None:
+            sim = self.bootstrap_similarity(params, state)
+            self.selector.fit_communities(sim)
+        else:
+            tree, meta = restored["tree"], restored["metadata"]
+            load_selector_state(self.selector, tree["selector"])
+            self._last_loss = unpack_float_map(tree["last_loss"])
+            params = tree_like(params, tree["params"])
+            state = tree_like(state, tree["state"])
+            clock = float(meta["clock"])
+            round_idx = int(meta["round_idx"]) + 1
+            start_stage = int(meta["stage"])
 
-        for stage in range(n_stages):
+        for stage in range(start_stage, n_stages):
+            mid = restored["metadata"] if (restored is not None
+                                           and stage == start_stage) else None
             if schedule is not None:
                 plan_rounds = schedule[stage]
+            elif mid is not None:
+                plan_rounds = int(mid["plan_rounds"])
             else:
                 # pace-adaptive budget: early freezes hand their unused rounds
                 # to later stages (reserve >=1 round per remaining stage)
@@ -203,66 +227,146 @@ class SmartFreezeServer:
             frozen, active = fz.init_cnn_stage_active(
                 model, params, stage, jax.random.PRNGKey(self.seed + stage),
                 op_kind=self.op_kind)
+            r_in_stage = 0
+            if mid is not None:
+                active = tree_like(active, restored["tree"]["active"])
+                pace.load_state_dict(restored["tree"]["pace"])
+                r_in_stage = int(mid["r_in_stage"]) + 1
             engine = self._stage_engine(stage, frozen, state)
+            if mid is not None and "ef" in restored["tree"]:
+                engine.load_ef_state(restored["tree"]["ef"])
             cache_ok = self._cache_plan(stage)
             mem_req = cnn_stage_memory_bytes(model, stage, self.batch_size,
                                              self.image_size)
+            stage_done = mid is not None and (
+                bool(mid.get("frozen")) or r_in_stage >= plan_rounds)
 
-            for r in range(plan_rounds):
-                if round_idx >= budget:
-                    break
-                # --- selection (Eq. 11-14): I_{t,i} = |D_i| * latest local loss ---
-                infos = {cid: dataclasses.replace(
-                    c.info(),
-                    loss_sum=self._last_loss.get(cid, 1e3) * c.num_samples)
-                    for cid, c in self.clients.items()}
+            if not stage_done:
+                stage_base = params
+                box = {"active": active, "state": state}
                 time_fn = lambda ci: ci.num_samples / ci.capability
-                selected = self.selector.select(infos, self.k,
-                                                mem_required=mem_req,
-                                                stage_time_fn=time_fn)
-                # --- deadline-based straggler mitigation (sequential path) ---
-                straggler_round = False
-                if self.deadline_factor > 0 and len(selected) > 2:
-                    straggler_round = True
-                    times = {cid: time_fn(infos[cid]) for cid in selected}
-                    deadline = np.median(list(times.values())) * self.deadline_factor
-                    kept = [cid for cid in selected if times[cid] <= deadline]
-                    if len(kept) >= max(2, len(selected) // 2):
-                        selected = kept
-                # --- local training + Eq. 1 aggregation (fused dispatch) ---
-                active, state, losses = engine.run_round(
-                    self.clients, selected, active, state, round_idx,
-                    use_cache=cache_ok,
-                    sequential=True if straggler_round else None)
-                self._last_loss.update(losses)
-                # --- pace controller ---
-                p = pace.observe(active.get("stages", active))
-                do_freeze = pace.should_freeze() and schedule is None
-                mean_loss = float(np.mean(list(losses.values())))
-                rr = RoundResult(round_idx, stage, mean_loss, selected=selected,
-                                 perturbation=p, frozen=do_freeze,
-                                 uplink_bytes=engine.last_uplink_bytes)
-                if eval_fn is not None and (round_idx % eval_every == 0 or do_freeze):
-                    merged = fz.merge_cnn_params(model, params, stage, active)
-                    rr.test_acc = eval_fn(merged, state, stage)
-                self.history.append(rr)
-                round_idx += 1
-                if do_freeze:
-                    break
+
+                def select_fn(r, avail):
+                    infos = {cid: dataclasses.replace(
+                        self.clients[cid].info(),
+                        loss_sum=(self._last_loss.get(cid, 1e3)
+                                  * self.clients[cid].num_samples))
+                        for cid in avail}
+                    try:
+                        # Eq. 11-14: I_{t,i} = |D_i| * latest local loss
+                        return self.selector.select(infos, self.k,
+                                                    mem_required=mem_req,
+                                                    stage_time_fn=time_fn)
+                    except InfeasibleStageError:
+                        if len(avail) < len(self.clients):
+                            # a transient availability dip, not the stage
+                            # being memory-infeasible: skip the round (it
+                            # costs 0.0 virtual seconds) instead of
+                            # aborting the run
+                            return []
+                        raise
+
+                def train_fn(cohort, r, sequential=None):
+                    box["active"], box["state"], losses = engine.run_round(
+                        self.clients, cohort, box["active"], box["state"], r,
+                        use_cache=cache_ok, sequential=sequential)
+                    self._last_loss.update(losses)
+                    return losses
+
+                def train_one_fn(cid, p, s, r):
+                    p_i, s_i, losses = engine.run_round(
+                        self.clients, [cid], p, s, r, use_cache=cache_ok,
+                        sequential=True)
+                    self._last_loss.update(losses)
+                    return p_i, s_i, losses[cid]
+
+                def set_model_fn(p, s):
+                    box["active"], box["state"] = p, s
+
+                def on_round(rec):
+                    p = pace.observe(box["active"].get("stages", box["active"]))
+                    do_freeze = pace.should_freeze() and schedule is None
+                    rr = RoundResult(rec.round_idx, stage, _mean_loss(rec.losses),
+                                     selected=rec.selected, perturbation=p,
+                                     frozen=do_freeze,
+                                     uplink_bytes=engine.last_uplink_bytes,
+                                     duration=rec.duration,
+                                     virtual_time=rec.t_end,
+                                     dropped=rec.dropped)
+                    if eval_fn is not None and (rec.round_idx % eval_every == 0
+                                                or do_freeze):
+                        merged = fz.merge_cnn_params(model, stage_base, stage,
+                                                     box["active"])
+                        rr.test_acc = eval_fn(merged, box["state"], stage)
+                    self.history.append(rr)
+                    if ckpt_manager is not None and ckpt_every and (
+                            (rec.round_idx + 1) % ckpt_every == 0 or do_freeze):
+                        self._save_ckpt(ckpt_manager, rec, stage, stage_base,
+                                        box, pace, engine, plan_rounds,
+                                        rec.round_idx - round_idx + r_in_stage,
+                                        do_freeze)
+                    return do_freeze
+
+                # copy before stamping the stage payload: a caller-supplied
+                # time model may be shared across runs/trainers
+                tm = (dataclasses.replace(self.time_model)
+                      if self.time_model is not None
+                      else FleetTimeModel.from_clients(self.clients))
+                tm.payload_bytes = engine.per_client_uplink_bytes(active)
+                loop = FederatedLoop(
+                    select_fn=select_fn, train_fn=train_fn,
+                    clients=self.clients,
+                    client_ids=list(self.clients),
+                    aggregation=policy, time_model=tm,
+                    availability=self.availability, on_round=on_round,
+                    snapshot_fn=lambda: (box["active"], box["state"]),
+                    train_one_fn=train_one_fn,
+                    get_model_fn=lambda: (box["active"], box["state"]),
+                    set_model_fn=set_model_fn, clock=clock)
+                n_run = max(min(plan_rounds - r_in_stage,
+                                budget - round_idx), 0)
+                done = loop.run(n_run, start_round=round_idx)
+                round_idx += len(done)
+                clock = loop.clock
+                active, state = box["active"], box["state"]
             # --- model growth ---
             params = fz.merge_cnn_params(model, params, stage, active)
+            if mid is not None:
+                restored = None  # consumed; later stages start fresh
         return {"params": params, "state": state, "history": self.history,
-                "rounds": round_idx}
+                "rounds": round_idx, "virtual_time": clock}
+
+    def _save_ckpt(self, mgr, rec, stage, stage_base, box, pace, engine,
+                   plan_rounds, r_in_stage, frozen_flag):
+        tree = {"params": stage_base, "active": box["active"],
+                "state": box["state"], "pace": pace.state_dict(),
+                "selector": selector_state_tree(self.selector),
+                "last_loss": pack_float_map(self._last_loss)}
+        ef = engine.ef_state()
+        if ef is not None:
+            tree["ef"] = ef
+        mgr.save(rec.round_idx, tree, metadata={
+            "stage": stage, "round_idx": rec.round_idx,
+            "r_in_stage": int(r_in_stage), "plan_rounds": int(plan_rounds),
+            "clock": float(rec.t_end), "frozen": bool(frozen_flag)})
 
 
 class FedAvgServer:
-    """Vanilla FL baseline: full model every round, random selection."""
+    """Vanilla FL baseline: full model every round, random selection.
+
+    Runs on the same virtual-time ``FederatedLoop`` as SmartFreeze, so it
+    takes the same ``aggregation`` / ``time_model`` / ``availability``
+    knobs (sync / deadline / async-buffered) and reports per-round virtual
+    durations in its history."""
 
     def __init__(self, model: CNN, clients: List[SimClient], *,
                  optimizer_fn=lambda: sgd(0.05), clients_per_round: int = 10,
                  local_epochs: int = 1, batch_size: int = 32,
                  mem_required: float = 0.0, seed: int = 0, fused: bool = True,
-                 compress_ratio: Optional[float] = None):
+                 compress_ratio: Optional[float] = None,
+                 aggregation: Union[str, object, None] = None,
+                 time_model: Optional[FleetTimeModel] = None,
+                 availability: Optional[AvailabilityTrace] = None):
         self.model = model
         self.clients = {c.client_id: c for c in clients}
         self.optimizer_fn = optimizer_fn
@@ -273,9 +377,13 @@ class FedAvgServer:
         self.seed = seed
         self.fused = fused
         self.compress_ratio = compress_ratio
+        self.aggregation = aggregation
+        self.time_model = time_model
+        self.availability = availability
         self.history: List[RoundResult] = []
 
-    def run(self, params, state, *, rounds: int, eval_fn=None, eval_every=10):
+    def run(self, params, state, *, rounds: int, eval_fn=None, eval_every=10,
+            ckpt_manager=None, ckpt_every: int = 0, resume: bool = False):
         model = self.model
         n_stages = len(model.cfg.stage_sizes)
 
@@ -290,18 +398,82 @@ class FedAvgServer:
         rng = np.random.RandomState(self.seed)
         eligible = [cid for cid, c in self.clients.items()
                     if c.memory_bytes >= self.mem_required]
-        for r in range(rounds):
-            if not eligible:
-                break
-            sel = list(rng.choice(eligible, size=min(self.k, len(eligible)),
-                                  replace=False))
-            params, state, losses = engine.run_round(
-                self.clients, sel, params, state, r)
-            rr = RoundResult(r, n_stages - 1,
-                             float(np.mean(list(losses.values()))), selected=sel,
-                             uplink_bytes=engine.last_uplink_bytes)
-            if eval_fn is not None and r % eval_every == 0:
-                rr.test_acc = eval_fn(params, state, n_stages - 1)
+        participation = len(eligible) / len(self.clients)
+        clock = 0.0
+        start_round = 0
+        if resume and ckpt_manager is not None:
+            try:
+                ck = ckpt_manager.restore()
+            except FileNotFoundError:
+                ck = None
+            if ck is not None:
+                params = tree_like(params, ck["tree"]["params"])
+                state = tree_like(state, ck["tree"]["state"])
+                rng = unpack_rng_state(ck["tree"]["rng"])
+                if "ef" in ck["tree"]:
+                    engine.load_ef_state(ck["tree"]["ef"])
+                clock = float(ck["metadata"]["clock"])
+                start_round = int(ck["metadata"]["round_idx"]) + 1
+        if not eligible or start_round >= rounds:
+            return {"params": params, "state": state, "history": self.history,
+                    "participation": participation, "virtual_time": clock}
+
+        box = {"params": params, "state": state}
+        elig_set = set(eligible)
+
+        def select_fn(r, avail):
+            cands = [c for c in avail if c in elig_set]
+            if not cands:
+                return []
+            return list(rng.choice(cands, size=min(self.k, len(cands)),
+                                   replace=False))
+
+        def train_fn(cohort, r, sequential=None):
+            box["params"], box["state"], losses = engine.run_round(
+                self.clients, cohort, box["params"], box["state"], r,
+                sequential=sequential)
+            return losses
+
+        def train_one_fn(cid, p, s, r):
+            p_i, s_i, losses = engine.run_round(self.clients, [cid], p, s, r,
+                                                sequential=True)
+            return p_i, s_i, losses[cid]
+
+        def on_round(rec):
+            rr = RoundResult(rec.round_idx, n_stages - 1,
+                             _mean_loss(rec.losses), selected=rec.selected,
+                             uplink_bytes=engine.last_uplink_bytes,
+                             duration=rec.duration, virtual_time=rec.t_end,
+                             dropped=rec.dropped)
+            if eval_fn is not None and rec.round_idx % eval_every == 0:
+                rr.test_acc = eval_fn(box["params"], box["state"], n_stages - 1)
             self.history.append(rr)
-        return {"params": params, "state": state, "history": self.history,
-                "participation": len(eligible) / len(self.clients)}
+            if ckpt_manager is not None and ckpt_every and (
+                    (rec.round_idx + 1) % ckpt_every == 0):
+                tree = {"params": box["params"], "state": box["state"],
+                        "rng": pack_rng_state(rng)}
+                ef = engine.ef_state()
+                if ef is not None:
+                    tree["ef"] = ef
+                ckpt_manager.save(rec.round_idx, tree, metadata={
+                    "round_idx": rec.round_idx, "clock": float(rec.t_end)})
+            return False
+
+        tm = (dataclasses.replace(self.time_model)
+              if self.time_model is not None
+              else FleetTimeModel.from_clients(self.clients))
+        tm.payload_bytes = engine.per_client_uplink_bytes(box["params"])
+        loop = FederatedLoop(
+            select_fn=select_fn, train_fn=train_fn, clients=self.clients,
+            client_ids=list(self.clients),
+            aggregation=self.aggregation or "sync", time_model=tm,
+            availability=self.availability, on_round=on_round,
+            snapshot_fn=lambda: (box["params"], box["state"]),
+            train_one_fn=train_one_fn,
+            get_model_fn=lambda: (box["params"], box["state"]),
+            set_model_fn=lambda p, s: box.update(params=p, state=s),
+            clock=clock)
+        loop.run(rounds - start_round, start_round=start_round)
+        return {"params": box["params"], "state": box["state"],
+                "history": self.history, "participation": participation,
+                "virtual_time": loop.clock}

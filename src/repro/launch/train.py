@@ -3,9 +3,14 @@
 Runs SmartFreeze on any ``--arch``: per stage, build the (frozen, active)
 split + output module, run federated rounds (pods = cross-silo clients; on
 CPU this is a 1-pod debug mesh), feed the pace controller with the aggregated
-active block each round, freeze on convergence, grow, repeat. Checkpoints
-(atomic/async) every ``--ckpt-every`` rounds; ``--resume`` restores params +
-stage + round.
+active block each round, freeze on convergence, grow, repeat.
+
+Round orchestration goes through ``fl/sim.py``'s ``FederatedLoop`` — the
+same virtual-time loop the CNN servers and baselines drive — with pods as
+the "clients". Checkpoints (atomic/async) every ``--ckpt-every`` rounds now
+carry the pace-controller window and the data RNG stream alongside the
+merged params, so ``--resume`` continues the perturbation series and data
+order mid-stage instead of restarting the stage.
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --reduced \
@@ -27,6 +32,8 @@ from repro.checkpoint import CheckpointManager
 from repro.core import freezing
 from repro.core.pace import PaceController
 from repro.data.synthetic import make_lm_batch
+from repro.fl.sim import (FederatedLoop, pack_rng_state, tree_like,
+                          unpack_rng_state)
 from repro.models.transformer import build
 from repro.optim import adamw, sgd, warmup_cosine
 
@@ -50,22 +57,44 @@ def train(arch: str, *, reduced: bool = True, steps: int = 40, batch: int = 8,
     T = cfg.num_freeze_blocks
     mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
 
-    start_stage, start_round = 0, 0
+    rng = np.random.RandomState(seed)
+    start_stage, start_in_stage = 0, 0
+    restored_pace = None
+    restored_active = None
+    restored_global = None
     if resume and mgr is not None:
         try:
             ck = mgr.restore()
             meta = ck["metadata"]
+            tree = ck["tree"]
+            saved = tree.get("params", tree)  # legacy ckpts stored bare params
             params = jax.tree.map(lambda a, b: jnp.asarray(b, a.dtype), params,
-                                  ck["tree"])
-            start_stage, start_round = meta["stage"], meta["round"] + 1
-            print(f"resumed from stage {start_stage} round {start_round}")
+                                  saved)
+            if "rng" in tree:
+                rng = unpack_rng_state(tree["rng"])
+            restored_pace = tree.get("pace")
+            restored_active = tree.get("active")  # incl. the op module
+            restored_global = meta.get("global_round")
+            start_stage, start_in_stage = meta["stage"], meta["round"] + 1
+            if meta.get("frozen"):
+                # checkpoint landed on a pace-freeze round: params already
+                # carry that stage's merge — continue with the next stage
+                start_stage, start_in_stage = start_stage + 1, 0
+                restored_pace = restored_active = None
+            print(f"resumed from stage {start_stage} round {start_in_stage}")
         except FileNotFoundError:
             pass
 
     history = []
     rounds_per_stage = max(steps // T, 1)
-    rng = np.random.RandomState(seed)
-    global_round = 0
+    if start_in_stage >= rounds_per_stage:
+        # checkpoint landed on a stage's final round: params already carry
+        # the finished stage's merge — continue with the next stage
+        start_stage, start_in_stage = start_stage + 1, 0
+    # prefer the checkpointed global index: stages frozen early ran fewer
+    # than rounds_per_stage rounds, so recomputing from stage*rps drifts
+    global_round = (restored_global + 1 if restored_global is not None
+                    else start_stage * rounds_per_stage + start_in_stage)
 
     for stage in range(start_stage, T):
         plan = freezing.make_stage_plan(cfg, stage)
@@ -78,36 +107,69 @@ def train(arch: str, *, reduced: bool = True, steps: int = 40, batch: int = 8,
         pace = PaceController(**(pace_kwargs or dict(
             min_rounds=max(rounds_per_stage // 2, 3), mu=2,
             slope_lambda=5e-3)))
+        r0 = start_in_stage if stage == start_stage else 0
+        if r0 and restored_pace is not None:
+            pace.load_state_dict(restored_pace)
+            restored_pace = None
+        if r0 and restored_active is not None:
+            # merged params don't carry the op module — restore the full
+            # active tree so mid-stage resume keeps its trained state
+            active = tree_like(active, restored_active)
+            restored_active = None
         t_stage = time.time()
-        for r in range(rounds_per_stage):
+        box = {"active": active, "stage_round": r0}
+
+        def train_fn(cohort, r, sequential=None, _box=box, _step=step_fn,
+                     _frozen=frozen):
             data = make_lm_batch(cfg, num_pods * local_steps * batch, seq,
                                  seed=rng.randint(1 << 30))
             fed = {k: jnp.asarray(v).reshape(
                 (num_pods, local_steps, batch) + v.shape[1:])
                 for k, v in data.items()}
             w = jnp.ones((num_pods,), jnp.float32)
-            active, metrics = step_fn(active, frozen, fed, w)
-            p = pace.observe(active["runs"])
-            history.append({"stage": stage, "round": r,
-                            "loss": float(metrics["loss"]),
+            _box["active"], metrics = _step(_box["active"], _frozen, fed, w)
+            loss = float(metrics["loss"])
+            return {pod: loss for pod in cohort}
+
+        def on_round(rec, _box=box, _pace=pace, _stage=stage):
+            r = _box["stage_round"]
+            loss = next(iter(rec.losses.values())) if rec.losses else float("nan")
+            p = _pace.observe(_box["active"]["runs"])
+            history.append({"stage": _stage, "round": r, "loss": loss,
                             "perturbation": p})
             if r % log_every == 0:
-                print(f"stage {stage} round {r:3d} loss {metrics['loss']:.4f} "
+                print(f"stage {_stage} round {r:3d} loss {loss:.4f} "
                       f"P={p if p is None else round(p, 4)}")
-            if mgr and (global_round + 1) % ckpt_every == 0:
-                merged = freezing.merge_stage_params(model, params, plan, active)
-                mgr.save(global_round, merged,
-                         metadata={"stage": stage, "round": r})
-            global_round += 1
-            if pace.should_freeze():
-                print(f"stage {stage} frozen by pace controller at round {r}")
-                break
-        params = freezing.merge_stage_params(model, params, plan, active)
+            freeze = _pace.should_freeze()
+            if mgr and (rec.round_idx + 1) % ckpt_every == 0:
+                merged = freezing.merge_stage_params(model, params, plan,
+                                                     _box["active"])
+                mgr.save(rec.round_idx,
+                         {"params": merged, "active": _box["active"],
+                          "pace": _pace.state_dict(),
+                          "rng": pack_rng_state(rng)},
+                         metadata={"stage": _stage, "round": r,
+                                   "global_round": rec.round_idx,
+                                   "frozen": bool(freeze)})
+            _box["stage_round"] = r + 1
+            if freeze:
+                print(f"stage {_stage} frozen by pace controller at round {r}")
+            return freeze
+
+        loop = FederatedLoop(select_fn=lambda r, avail: avail,
+                             train_fn=train_fn,
+                             client_ids=list(range(num_pods)),
+                             on_round=on_round)
+        done = loop.run(rounds_per_stage - r0, start_round=global_round)
+        global_round += len(done)
+        params = freezing.merge_stage_params(model, params, plan, box["active"])
         print(f"stage {stage} done in {time.time() - t_stage:.0f}s")
 
     if mgr:
-        mgr.save(global_round, params, metadata={"stage": T - 1,
-                                                 "round": global_round})
+        mgr.save(global_round, {"params": params,
+                                "rng": pack_rng_state(rng)},
+                 metadata={"stage": T - 1, "round": rounds_per_stage,
+                           "global_round": global_round})
         mgr.wait()
     return {"params": params, "history": history, "config": cfg}
 
@@ -134,7 +196,11 @@ def main():
                 lr=a.lr, ckpt_dir=a.ckpt_dir, resume=a.resume, remat=a.remat,
                 d_model=a.d_model, num_layers=a.num_layers)
     losses = [h["loss"] for h in out["history"]]
-    print(f"finished: {len(losses)} rounds, loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    if losses:
+        print(f"finished: {len(losses)} rounds, "
+              f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    else:
+        print("finished: nothing left to run (checkpoint already complete)")
 
 
 if __name__ == "__main__":

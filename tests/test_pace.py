@@ -68,6 +68,74 @@ def test_min_rounds_guard():
     assert not ctrl.should_freeze()
 
 
+def _seed_reference_series(params_seq, Q):
+    """The seed implementation's algorithm, verbatim: a FIFO of Q+1 full
+    snapshots, numerator = newest - oldest, denominator = scalar-norm FIFO.
+    The refactored telescoped/flat-window controller must emit the identical
+    perturbation series."""
+    from collections import deque
+    snaps, norms, perts = deque(), deque(), []
+    for p in params_seq:
+        p = np.asarray(p, np.float32)
+        if snaps:
+            norms.append(float(np.linalg.norm(
+                (p - snaps[-1]).astype(np.float64))))
+            if len(norms) > Q:
+                norms.popleft()
+        snaps.append(p)
+        if len(snaps) > Q + 1:
+            snaps.popleft()
+        if len(snaps) < 2:
+            continue
+        num = float(np.linalg.norm((snaps[-1] - snaps[0]).astype(np.float64)))
+        perts.append(num / (sum(norms) + 1e-12))
+    return perts
+
+
+def test_flat_window_series_identical_to_seed_algorithm():
+    """Satellite check: the storage refactor (flat vectors instead of Q+1
+    structured pytree snapshot copies) changes ZERO perturbation values."""
+    rng = np.random.RandomState(3)
+    for Q in (1, 3, 5):
+        ctrl = PaceController(window_q=Q, min_rounds=1)
+        thetas = [rng.randn(64).astype(np.float32)]
+        for _ in range(25):
+            thetas.append(thetas[-1]
+                          + rng.randn(64).astype(np.float32) * 0.2)
+        _feed(ctrl, thetas)
+        ref = _seed_reference_series(thetas, Q)
+        np.testing.assert_allclose(ctrl._perturbations, ref, rtol=1e-10)
+
+
+def test_low_memory_window_tracks_exact_and_freezes():
+    """The anchored (low_memory=True) window keeps 2 block copies instead of
+    Q+1; its perturbation tracks the exact series on converging sequences
+    and reaches the same freeze decision within a few rounds."""
+    rng = np.random.RandomState(7)
+    exact = PaceController(window_q=4, smooth_h=3, mu=2, min_rounds=5,
+                           slope_lambda=5e-2)
+    lowmem = PaceController(window_q=4, smooth_h=3, mu=2, min_rounds=5,
+                            slope_lambda=5e-2, low_memory=True)
+    theta = rng.randn(100).astype(np.float32)
+    froze_exact = froze_low = None
+    for r in range(60):
+        theta = theta + (0.5 / (1 + r)) * rng.randn(100).astype(np.float32)
+        exact.observe({"w": theta})
+        lowmem.observe({"w": theta})
+        if froze_exact is None and exact.should_freeze():
+            froze_exact = r
+        if froze_low is None and lowmem.should_freeze():
+            froze_low = r
+        if froze_exact is not None and froze_low is not None:
+            break
+    assert froze_exact is not None and froze_low is not None
+    assert abs(froze_exact - froze_low) <= 5
+    # low-memory state really is O(1) block copies
+    assert len(lowmem._window) == 0
+    assert lowmem._anchor is not None and lowmem._prev is not None
+    assert len(exact._window) == 5  # Q + 1
+
+
 def test_schedules():
     from repro.core.pace import front_loaded_schedule, naive_equal_schedule
 
