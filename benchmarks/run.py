@@ -17,6 +17,9 @@ communities) are what reproduce the paper's tables.
                            (N up to 100k) + in-graph compressed fused round
                            (emits BENCH_selector_scale.json; BENCH_SMOKE=1
                            for the N=1k CI smoke)
+  cache_quant              memory-tiered feature cache: bytes + us/round per
+                           tier, fleet admission f32-only vs ladder, f32 vs
+                           int8 accuracy (emits BENCH_cache_quant.json)
 
 Run everything: ``python benchmarks/run.py``; or name a subset:
 ``python benchmarks/run.py round_engine fig10_memory``.
@@ -564,6 +567,155 @@ def selector_scale():
          + f";ratio1_allclose={ratio1_ok}")
 
 
+def cache_quant(rounds=10):
+    """Memory-tiered frozen-prefix activation cache (PR 4).
+
+    On a straggler-heavy heterogeneous fleet whose memories straddle the
+    tier thresholds, reports: feature-cache bytes per tier (f32/fp16/int8,
+    honest stored-dtype accounting incl. int8 scale vectors), the share of
+    the fleet admitted to cached mode under f32-only vs ladder admission
+    (Eq. 12 per tier), cached-round us at f32 vs int8, virtual-clock time
+    for a short SmartFreeze run under both admission policies
+    (cache_time_scale on: admitted clients skip the prefix forward), and
+    the final-accuracy delta between f32-cached and int8-cached stage
+    training. Asserts the PR's acceptance contract: >=3.5x int8 cache
+    reduction, accuracy within 1 point, strictly more clients admitted by
+    the ladder than by f32-only admission. Writes
+    benchmarks/BENCH_cache_quant.json. BENCH_SMOKE=1 trims rounds.
+    """
+    import jax, jax.numpy as jnp
+    from repro.core import freezing_cnn as fz
+    from repro.core.memory_model import (CACHE_TIER_DTYPES, CACHE_TIERS,
+                                         cnn_stage_memory_bytes)
+    from repro.data.partition import iid_partition
+    from repro.data.synthetic import SyntheticVision
+    from repro.fl.client import make_client_fleet
+    from repro.fl.engine import RoundEngine
+    from repro.fl.server import SmartFreezeServer
+    from repro.models.cnn import CNN, CNNConfig
+    from repro.optim import sgd
+
+    smoke = bool(int(os.environ.get("BENCH_SMOKE", "0")))
+    rounds = 4 if smoke else rounds
+    sv = SyntheticVision(num_classes=8, image_size=16)
+    train = sv.sample(1536, seed=1)
+    test = sv.sample(384, seed=2)
+    parts = iid_partition(train["y"], 12, seed=0)
+    clients = make_client_fleet(train, parts, scenario="high", seed=0)
+    cfg = CNNConfig("rn", "resnet", stage_sizes=(1, 1),
+                    stage_channels=(12, 24), num_classes=8)
+    model = CNN(cfg)
+    stage = 1
+    # straggler-heavy: a quarter of the fleet 20x slower (paper §V)
+    for c in clients:
+        c.capability = 0.05e9 if c.client_id % 4 == 0 else 1e9
+    # memories straddle the tier ladder: 1/4 full f32 cache, 1/4 fp16-only,
+    # 1/4 int8-only, 1/4 stage-only (cache declined even at int8). The
+    # stragglers (i % 4 == 0) are exactly the int8-only quartile, so ladder
+    # admission accelerates the clients that gate the sync barrier while
+    # f32-only admission leaves them on full prefix recompute.
+    need = lambda c, dt: cnn_stage_memory_bytes(
+        model, stage, 32, 16, cache_samples=c.num_samples, cache_dtype=dt)
+    base = cnn_stage_memory_bytes(model, stage, 32, 16)
+    for i, c in enumerate(clients):
+        c.memory_bytes = [need(c, "int8"), need(c, "float32"),
+                          need(c, "float16"), base][i % 4] * 1.02
+
+    t0 = time.time()
+    srv_f32 = SmartFreezeServer(model, clients, cache_tiers=("f32",))
+    srv_all = SmartFreezeServer(model, clients, cache_tiers="all")
+    admitted = {
+        "f32_only": sum(1 for t in srv_f32._cache_plan(stage).values() if t),
+        "ladder": sum(1 for t in srv_all._cache_plan(stage).values() if t),
+        "fleet": len(clients),
+    }
+    ladder_plan = srv_all._cache_plan(stage)
+    tier_counts = {t: sum(1 for v in ladder_plan.values() if v == t)
+                   for t in CACHE_TIERS}
+
+    # --- cache bytes + us/round per tier (same fully-admitted cohort) ---
+    params, state = model.init(jax.random.PRNGKey(0))
+    frozen, active = fz.init_cnn_stage_active(model, params, stage,
+                                              jax.random.PRNGKey(1))
+    by_id = {c.client_id: c for c in clients}
+    sel = [c.client_id for c in clients[:6]]
+
+    def make_engine():
+        return RoundEngine(
+            loss_fn=fz.cnn_stage_loss_fn(model, stage), optimizer=sgd(0.05),
+            frozen=frozen,
+            cached_loss_fn=fz.cnn_cached_stage_loss_fn(model, stage),
+            feature_fn=lambda x: fz.cnn_prefix_features(model, frozen, state,
+                                                        x, stage),
+            batch_size=32, local_epochs=1, fused=not smoke)
+
+    cache_bytes, us_per_round, final_acc = {}, {}, {}
+    timed = 1 if smoke else max(rounds // 2, 2)
+    for tier in CACHE_TIERS:
+        eng = make_engine()
+        cache = {cid: tier for cid in sel}
+        a, st = active, state
+        a, st, _ = eng.run_round(by_id, sel, a, st, 0, use_cache=cache)
+        cache_bytes[tier] = eng.cache_nbytes()
+        t1 = time.time()
+        for r in range(1, timed + 1):
+            a, st, _ = eng.run_round(by_id, sel, a, st, r, use_cache=cache)
+        jax.tree.leaves(a)[0].block_until_ready()
+        us_per_round[tier] = (time.time() - t1) / timed * 1e6
+        for r in range(timed + 1, rounds + 1):  # finish the training budget
+            a, st, _ = eng.run_round(by_id, sel, a, st, r, use_cache=cache)
+        merged = fz.merge_cnn_params(model, params, stage, a)
+        logits, _ = model.apply(merged, st, jnp.asarray(test["x"]),
+                                train=False)
+        final_acc[tier] = float((jnp.argmax(logits, -1)
+                                 == jnp.asarray(test["y"])).mean())
+    reduction = cache_bytes["f32"] / cache_bytes["int8"]
+    acc_delta = abs(final_acc["f32"] - final_acc["int8"])
+
+    # --- admission reaches the virtual clock (cache_time_scale on): the
+    # sync barrier waits on the 20x stragglers, and only ladder admission
+    # gets their prefix out of the per-minibatch loop ---
+    from repro.fl.sim import FleetTimeModel
+    virtual_s = {}
+    for name, tiers in (("f32_only", ("f32",)), ("ladder", "all")):
+        tm = FleetTimeModel.from_clients(clients, flops_per_sample=5e7)
+        srv = SmartFreezeServer(model, clients, clients_per_round=6,
+                                batch_size=32, seed=0, fused=False,
+                                cache_tiers=tiers, cache_time_scale=True,
+                                time_model=tm,
+                                pace_kwargs=dict(min_rounds=99))
+        out = srv.run(params, state, schedule=[1, rounds])
+        virtual_s[name] = out["virtual_time"]
+    assert virtual_s["ladder"] < virtual_s["f32_only"], virtual_s
+
+    out = {"smoke": smoke, "rounds": rounds,
+           "cache_bytes": cache_bytes,
+           "int8_reduction_x": reduction,
+           "admitted": admitted,
+           "ladder_tier_counts": tier_counts,
+           "cached_pct": {k: admitted[k] / admitted["fleet"]
+                          for k in ("f32_only", "ladder")},
+           "us_per_round": us_per_round,
+           "final_acc": final_acc,
+           "acc_delta_f32_vs_int8": acc_delta,
+           "virtual_s": virtual_s}
+    path = os.path.join(os.path.dirname(__file__), "BENCH_cache_quant.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    # the PR's acceptance contract
+    assert reduction >= 3.5, f"int8 cache only {reduction:.2f}x smaller"
+    assert acc_delta <= 0.01, (final_acc["f32"], final_acc["int8"])
+    assert admitted["ladder"] > admitted["f32_only"], admitted
+    _row("cache_quant", us_per_round["int8"],
+         f"cache_f32={cache_bytes['f32']};cache_int8={cache_bytes['int8']};"
+         f"reduction={reduction:.2f}x;"
+         f"admitted_f32only={admitted['f32_only']}/{admitted['fleet']};"
+         f"admitted_ladder={admitted['ladder']}/{admitted['fleet']};"
+         f"acc_f32={final_acc['f32']:.3f};acc_int8={final_acc['int8']:.3f};"
+         f"virt_f32only={virtual_s['f32_only']:.1f}s;"
+         f"virt_ladder={virtual_s['ladder']:.1f}s")
+
+
 def sim_scale(rounds=18):
     """Virtual-time simulation core (fl/sim.py): one FederatedLoop under the
     three aggregation policies on a straggler-heavy fleet.
@@ -681,7 +833,7 @@ def main() -> None:
     BENCHES.update({f.__name__: f for f in (
         fig10_memory, speedup_time_model, fig9_rlcd, fig2_layer_convergence,
         kernels_microbench, round_engine, tab2_pace_ablation, tab1_fl_accuracy,
-        selector_scale, sim_scale)})
+        selector_scale, sim_scale, cache_quant)})
     names = sys.argv[1:] or list(BENCHES)
     unknown = [n for n in names if n not in BENCHES]
     if unknown:

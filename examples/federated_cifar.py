@@ -42,6 +42,12 @@ ap.add_argument("--dropout", type=float, default=0.0,
                 help="per-(client, round) mid-round dropout probability")
 ap.add_argument("--link-mbps", type=float, default=0.0,
                 help=">0: uplink rate in MB/s (payload time enters the clock)")
+ap.add_argument("--cache-tiers", choices=["f32", "all"], default="f32",
+                help="feature-cache admission ladder: f32-only (exact seed "
+                     "behavior) or the full f32->fp16->int8 ladder")
+ap.add_argument("--compute-dtype", default=None,
+                help="e.g. bfloat16: mixed-precision local training with "
+                     "f32 master params")
 ap.add_argument("--ckpt-dir", default=None)
 ap.add_argument("--ckpt-every", type=int, default=1)
 ap.add_argument("--resume", action="store_true")
@@ -82,6 +88,10 @@ srv = SmartFreezeServer(model, clients, clients_per_round=6, local_epochs=1,
                         batch_size=32, rounds_per_stage=args.rounds_per_stage,
                         aggregation=policy, time_model=time_model,
                         availability=availability,
+                        cache_tiers=("f32",) if args.cache_tiers == "f32"
+                        else "all",
+                        cache_time_scale=args.cache_tiers != "f32",
+                        compute_dtype=args.compute_dtype,
                         pace_kwargs=dict(min_rounds=4, mu=2, slope_lambda=2e-2))
 out = srv.run(params, state, eval_fn=eval_fn, eval_every=2,
               ckpt_manager=mgr, ckpt_every=args.ckpt_every if mgr else 0,

@@ -22,6 +22,28 @@ import numpy as np
 
 BYTES = {"bfloat16": 2, "float32": 4}
 
+# Feature-cache precision tiers, in ADMISSION ORDER: servers try the most
+# exact tier first and degrade (f32 -> fp16 -> int8) until a client's
+# memory covers the stage requirement plus its shard's cache, declining the
+# cache only when even int8 does not fit (fl/quant.py implements the
+# encode/decode; fl/engine.py stores, fl/server.py admits).
+CACHE_TIERS = ("f32", "fp16", "int8")
+CACHE_TIER_DTYPES = {"f32": "float32", "fp16": "float16", "int8": "int8"}
+_CACHE_DTYPE_BYTES = {"float32": 4.0, "bfloat16": 2.0, "float16": 2.0,
+                      "int8": 1.0}
+
+
+def cache_tier_ladder(memory_bytes: float, requirement_fn,
+                      tiers=CACHE_TIERS) -> Optional[str]:
+    """First tier in ``tiers`` whose total stage-plus-cache requirement
+    (``requirement_fn(tier) -> bytes``) fits ``memory_bytes``; ``None``
+    declines the cache (the client falls back to recomputing the frozen
+    prefix every minibatch)."""
+    for tier in tiers:
+        if memory_bytes >= requirement_fn(tier):
+            return tier
+    return None
+
 
 # ---------------------------------------------------------------------------
 # Parameter counts (exact, via eval_shape)
@@ -119,17 +141,32 @@ def layer_activation_bytes(cfg, batch: int, seq: int, kind: str) -> int:
     raise ValueError(kind)
 
 
-def feature_cache_bytes(cfg, num_tokens: int) -> float:
+def feature_cache_bytes(cfg, num_tokens: int, dtype: Optional[str] = None, *,
+                        scale_vectors: int = 0) -> float:
     """Bytes to hold cached frozen-prefix activations for ``num_tokens``
     tokens of a client shard (the [*, d_model] hidden at the stage's
-    stop-gradient boundary, in compute dtype)."""
-    return float(num_tokens) * cfg.d_model * BYTES[cfg.compute_dtype]
+    stop-gradient boundary).
+
+    ``dtype`` is the cache storage dtype — ``None`` keeps the legacy
+    behavior (the config's compute dtype); ``"float16"``/``"int8"`` are the
+    fp16/int8 tiers (fl/quant.py). An int8 cache additionally stores one
+    f32 scale vector of ``d_model`` entries per quantization group
+    (per-sample, per-channel) — pass the group count as ``scale_vectors``
+    (``stage_memory_bytes`` derives it as ``cache_tokens // seq``).
+    """
+    per = (_CACHE_DTYPE_BYTES[dtype] if dtype is not None
+           else BYTES[cfg.compute_dtype])
+    total = float(num_tokens) * cfg.d_model * per
+    if dtype == "int8":
+        total += float(scale_vectors) * cfg.d_model * 4.0
+    return total
 
 
 def stage_memory_bytes(cfg, stage: int, batch: int, seq: int, *,
                        optimizer: str = "adamw",
                        op_module_layers: Optional[int] = None,
-                       cache_tokens: int = 0) -> Dict[str, float]:
+                       cache_tokens: int = 0,
+                       cache_dtype: Optional[str] = None) -> Dict[str, float]:
     """Eq. (4) for SmartFreeze stage ``stage`` (0-based). Returns the terms.
 
     Vanilla full-model training is ``stage=None``-like via stage=T-1 plus
@@ -138,7 +175,11 @@ def stage_memory_bytes(cfg, stage: int, batch: int, seq: int, *,
     ``cache_tokens``: frozen-prefix feature-cache hook (fl/engine.py). When a
     client additionally holds its shard's prefix activations, the requirement
     grows by ``feature_cache_bytes`` — the selector uses this to decline the
-    cache on memory-poor clients.
+    cache on memory-poor clients. ``cache_dtype`` selects the cache storage
+    tier (``"float32"``/``"float16"``/``"int8"``; ``None`` = compute dtype):
+    the admission ladder calls this per tier and grants the first that fits,
+    so an int8 cache (~4x smaller, incl. its per-sample scale vectors)
+    admits clients the f32 cache would decline.
     """
     bounds = cfg.block_boundaries()
     lo, hi = bounds[stage], bounds[stage + 1]
@@ -170,7 +211,9 @@ def stage_memory_bytes(cfg, stage: int, batch: int, seq: int, *,
     # transient: the largest single-layer activation in the forward
     max_layer = max(layer_activation_bytes(cfg, batch, seq, kinds[i])
                     for i in range(0, hi))
-    cache_b = feature_cache_bytes(cfg, cache_tokens) if cache_tokens else 0.0
+    cache_b = feature_cache_bytes(
+        cfg, cache_tokens, cache_dtype,
+        scale_vectors=cache_tokens // max(seq, 1)) if cache_tokens else 0.0
     return {"params": params_bytes, "activations": act_term,
             "optimizer": opt_bytes, "max_transient": max_layer,
             "feature_cache": cache_b,
@@ -280,9 +323,13 @@ def model_flops_6nd(cfg, batch: int, seq: int) -> float:
 
 
 def cnn_feature_cache_bytes(model, stage: int, num_samples: int,
-                            image_size: int = 32) -> float:
-    """Bytes to hold a client shard's frozen-prefix activations (fp32):
-    the feature map at the stage boundary, one per local sample."""
+                            image_size: int = 32,
+                            dtype: str = "float32") -> float:
+    """Bytes to hold a client shard's frozen-prefix activations: the
+    feature map at the stage boundary, one per local sample, stored at the
+    cache tier's ``dtype`` (``"float32"``/``"float16"``/``"int8"`` —
+    fl/quant.py). An int8 cache adds one f32 scale per (sample, channel)
+    quantization group."""
     if stage <= 0:
         return 0.0
     cfg = model.cfg
@@ -291,17 +338,24 @@ def cnn_feature_cache_bytes(model, stage: int, num_samples: int,
         res = max(image_size // (2 ** stage), 1)
     else:  # resnet: stride-2 at each stage entry except stage 0
         res = max(image_size // (2 ** (stage - 1)), 1)
-    return float(num_samples) * res * res * ch * 4.0
+    total = float(num_samples) * res * res * ch * _CACHE_DTYPE_BYTES[dtype]
+    if dtype == "int8":
+        total += float(num_samples) * ch * 4.0
+    return total
 
 
 def cnn_stage_memory_bytes(model, stage: int, batch_size: int,
                            image_size: int = 32, *,
-                           cache_samples: int = 0) -> float:
+                           cache_samples: int = 0,
+                           cache_dtype: str = "float32") -> float:
     """Eq. (4) for the CNN testbed (fp32). ``cache_samples`` is the feature
     cache hook: when a client would additionally hold its shard's frozen-
     prefix activations, the requirement grows by ``cnn_feature_cache_bytes``
     — the selector/server uses this to decline the cache on memory-poor
-    clients (who fall back to recomputing the prefix)."""
+    clients (who fall back to recomputing the prefix). ``cache_dtype``
+    prices the cache at a storage tier (fl/quant.py): the admission ladder
+    (``cache_tier_ladder``) evaluates this per tier f32 -> fp16 -> int8 and
+    grants the first that fits."""
     cfg = model.cfg
     res = image_size
     act = 0.0
@@ -320,5 +374,6 @@ def cnn_stage_memory_bytes(model, stage: int, batch_size: int,
     opt = params * 2.0  # momentum
     total = 2 * act + params + opt + max_act
     if cache_samples:
-        total += cnn_feature_cache_bytes(model, stage, cache_samples, image_size)
+        total += cnn_feature_cache_bytes(model, stage, cache_samples,
+                                         image_size, cache_dtype)
     return total

@@ -212,6 +212,33 @@ def _mask_to_community(score, community_id):
     return jnp.where(community_id == 0, score, -jnp.inf)
 
 
+@jax.jit
+def _tier_admission(memory_bytes, stage_bytes, tier_cache_bytes):
+    """Eq. 12 run once per feature-cache tier, vectorized: ``fits[t, i]``
+    iff client i's memory covers the stage requirement plus its shard's
+    cache at ladder tier t. Returns [N] i32 — the FIRST (most exact) tier
+    that fits, -1 when even the smallest tier is declined."""
+    fits = memory_bytes[None, :] >= stage_bytes + tier_cache_bytes
+    first = jnp.argmax(fits, axis=0).astype(jnp.int32)
+    return jnp.where(jnp.any(fits, axis=0), first, jnp.int32(-1))
+
+
+def assign_cache_tiers(pop: "ClientPopulation", stage_bytes: float,
+                       per_sample_bytes: Sequence[float]) -> np.ndarray:
+    """Population-scale feature-cache admission ladder (the vectorized twin
+    of ``SmartFreezeServer._cache_plan`` / ``memory_model.cache_tier_ladder``).
+
+    ``per_sample_bytes[t]`` is the cache cost per local sample at ladder
+    tier t (e.g. ``cnn_feature_cache_bytes(model, stage, 1, image_size,
+    dtype)`` — cache bytes are linear in shard size, int8 scale vectors
+    included, so the per-sample rate is exact). One O(T*N) kernel dispatch;
+    returns an [N] host array of ladder indices (-1 = cache declined)."""
+    rates = jnp.asarray(np.asarray(per_sample_bytes, np.float32))[:, None]
+    cache = rates * pop.num_samples.astype(jnp.float32)[None, :]
+    return np.asarray(_tier_admission(pop.memory_bytes,
+                                      jnp.float32(stage_bytes), cache))
+
+
 # ---------------------------------------------------------------------------
 # Host-side round-robin quota simulation (exact list-path mirror)
 # ---------------------------------------------------------------------------
@@ -327,6 +354,20 @@ class VectorizedSelector:
             self._communities = unpack_ragged(
                 {"flat": state["comm_flat"],
                  "offsets": state["comm_offsets"]})
+
+    # ----- feature-cache tier admission (Eq. 12 per tier) -----
+
+    def cache_admission(self, pop: ClientPopulation, *, stage_bytes: float,
+                        per_sample_bytes: Sequence[float],
+                        tiers: Sequence[str] = ("f32", "fp16", "int8")
+                        ) -> Dict[int, Optional[str]]:
+        """Tier granted per client id (None = recompute): the vectorized
+        form of the server's admission ladder, one kernel over the resident
+        population instead of an O(N) host walk. ``per_sample_bytes`` and
+        ``tiers`` align (most exact first)."""
+        idx = assign_cache_tiers(pop, stage_bytes, per_sample_bytes)
+        return {int(cid): (tiers[i] if i >= 0 else None)
+                for cid, i in zip(pop.client_ids, idx)}
 
     # ----- population-scale hot path -----
 

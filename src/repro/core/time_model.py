@@ -24,7 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.memory_model import stage_flops, full_model_flops
+from repro.core.memory_model import (full_model_flops,
+                                     layer_fwd_flops_per_token, stage_flops)
 
 
 def client_stage_time(cfg, stage: int, num_samples: int, capability_flops: float,
@@ -56,6 +57,35 @@ def stage_speedup(cfg, stage: int, *, batch: int = 1, seq: int = 128) -> float:
     full = full_model_flops(cfg, batch, seq)
     st = stage_flops(cfg, stage, batch, seq)["total"]
     return full / st
+
+
+def cnn_cached_compute_scale(stage: int) -> float:
+    """Fraction of a stage-``stage`` CNN local step that remains when the
+    frozen prefix is served from the feature cache (fl/engine.py) instead
+    of recomputed per minibatch.
+
+    CNN ladders double channels while halving resolution per stage, so
+    per-stage forward cost is roughly constant: a recompute step costs
+    ~``stage`` prefix-forward units plus fwd+bwd (~3 units) on the active
+    stage, a cached step just the 3 active units — scale 3 / (stage + 3).
+    Stage 0 has no prefix (scale 1). Feeds
+    ``FleetTimeModel.with_compute_scale`` so tier admission shows up on the
+    virtual clock and in deadline-policy cohort composition.
+    """
+    return 3.0 / (max(stage, 0) + 3.0)
+
+
+def lm_cached_compute_scale(cfg, stage: int, *, batch: int = 1,
+                            seq: int = 128) -> float:
+    """LM twin of ``cnn_cached_compute_scale``, exact under Eq. 5: a cached
+    step drops the frozen-prefix forward term from the stage FLOPs."""
+    fl = stage_flops(cfg, stage, batch, seq)
+    lo = cfg.block_boundaries()[stage]
+    kinds = cfg.layer_kinds()
+    tok = batch * seq
+    fwd_frozen = sum(layer_fwd_flops_per_token(cfg, kinds[i], seq)
+                     for i in range(lo)) * tok
+    return max(fl["total"] - fwd_frozen, 0.0) / fl["total"]
 
 
 # ---------------------------------------------------------------------------

@@ -6,3 +6,5 @@ from repro.fl.sim import (AsyncBufferedAggregation, AvailabilityTrace,
                           RoundRecord, SyncAggregation)
 from repro.fl.server import SmartFreezeServer, FedAvgServer, RoundResult
 from repro.fl.compression import topk_compress, topk_decompress, ErrorFeedback
+from repro.fl.quant import (CACHE_TIERS, EncodedFeatures, decode_features,
+                            dequantize_int8, encode_features, quantize_int8)

@@ -20,7 +20,9 @@ baselines have no single-model async hooks), ``time_model`` and
 TiFL/Oort charge their full-model payload against client uplinks like the
 servers do; DepthFL/HeteroFL cohorts upload per-client *submodels*, so
 callers wanting uplink-time accounting there pass a ``time_model`` with
-``payload_bytes`` set to their scenario's effective payload.
+``payload_bytes`` set to their scenario's effective payload. Every baseline
+also takes ``compute_dtype`` (e.g. ``"bfloat16"``) — the engine's
+mixed-precision local-training knob with f32 master params (fl/engine.py).
 """
 from __future__ import annotations
 
@@ -123,7 +125,7 @@ def run_exclusivefl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
 def run_depthfl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
                 batch_size: int = 32, clients_per_round: int = 10,
                 eval_fn=None, seed: int = 0, local_epochs: int = 1,
-                fused: bool = True, compress_ratio=None,
+                fused: bool = True, compress_ratio=None, compute_dtype=None,
                 aggregation="sync", time_model=None, availability=None) -> Dict:
     """Depth-scaled submodels: client c trains stages [0..d_c) + aux head."""
     model = CNN(cfg)
@@ -157,7 +159,8 @@ def run_depthfl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
 
         return RoundEngine(loss_fn=loss_fn, optimizer=sgd(0.05),
                            batch_size=batch_size, local_epochs=local_epochs,
-                           fused=fused, compress_ratio=compress_ratio)
+                           fused=fused, compress_ratio=compress_ratio,
+                           compute_dtype=compute_dtype)
 
     engines = {d: make_engine(d) for d in range(n_stages)}
     rng = np.random.RandomState(seed)
@@ -247,7 +250,7 @@ def _slice_like(full, small):
 def run_heterofl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
                  batch_size: int = 32, clients_per_round: int = 10,
                  eval_fn=None, seed: int = 0, local_epochs: int = 1,
-                 fused: bool = True, compress_ratio=None,
+                 fused: bool = True, compress_ratio=None, compute_dtype=None,
                  aggregation="sync", time_model=None, availability=None) -> Dict:
     model_full = CNN(cfg)
     params_full, state_full = model_full.init(jax.random.PRNGKey(seed))
@@ -271,7 +274,8 @@ def run_heterofl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
 
         return RoundEngine(loss_fn=loss_fn, optimizer=sgd(0.05),
                            batch_size=batch_size, local_epochs=local_epochs,
-                           fused=fused, compress_ratio=compress_ratio)
+                           fused=fused, compress_ratio=compress_ratio,
+                           compute_dtype=compute_dtype)
 
     engines = {s: make_engine(s) for s in _HFL_SCALES}
     rng = np.random.RandomState(seed)
@@ -368,6 +372,7 @@ def run_tifl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
     local_epochs = kw.pop("local_epochs", 1)
     fused = kw.pop("fused", True)
     compress_ratio = kw.pop("compress_ratio", None)
+    compute_dtype = kw.pop("compute_dtype", None)
     aggregation = kw.pop("aggregation", "sync")
     time_model = kw.pop("time_model", None)
     availability = kw.pop("availability", None)
@@ -377,7 +382,8 @@ def run_tifl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
     # round-scoped sub-server, recompiling every round)
     engine = RoundEngine(loss_fn=full_loss, optimizer=optimizer_fn(),
                          batch_size=batch_size, local_epochs=local_epochs,
-                         fused=fused, compress_ratio=compress_ratio)
+                         fused=fused, compress_ratio=compress_ratio,
+                         compute_dtype=compute_dtype)
     n_stages = len(cfg.stage_sizes)
     rng = np.random.RandomState(seed)
     history: List[RoundResult] = []
@@ -421,7 +427,7 @@ def run_tifl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
 def run_oort(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
              batch_size: int = 32, clients_per_round: int = 10,
              eval_fn=None, seed: int = 0, local_epochs: int = 1,
-             fused: bool = True, compress_ratio=None,
+             fused: bool = True, compress_ratio=None, compute_dtype=None,
              aggregation="sync", time_model=None, availability=None) -> Dict:
     from repro.core.selector.bandit import UtilBandit
 
@@ -439,7 +445,8 @@ def run_oort(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
 
     engine = RoundEngine(loss_fn=full_loss, optimizer=sgd(0.05),
                          batch_size=batch_size, local_epochs=local_epochs,
-                         fused=fused, compress_ratio=compress_ratio)
+                         fused=fused, compress_ratio=compress_ratio,
+                         compute_dtype=compute_dtype)
     history: List[RoundResult] = []
     n_stages = len(cfg.stage_sizes)
     box = {"params": params, "state": state}

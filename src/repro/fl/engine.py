@@ -46,6 +46,10 @@ import numpy as np
 from repro.fl.client import SimClient, batch_index_plan
 from repro.fl.compression import (ingraph_compress_leaf, ingraph_topk,
                                   topk_keep)
+from repro.fl.quant import (CACHE_TIERS, EncodedFeatures, cast_floating,
+                            encode_features, feature_batch_arrays,
+                            make_input_cast_loss, make_tiered_loss,
+                            normalize_tier)
 from repro.optim import Optimizer, apply_updates, clip_by_global_norm
 
 LossFn = Callable[[Any, Any, Any, Dict], Tuple[jnp.ndarray, Any]]
@@ -57,15 +61,39 @@ LossFn = Callable[[Any, Any, Any, Dict], Tuple[jnp.ndarray, Any]]
 # ---------------------------------------------------------------------------
 
 
-def weighted_avg(trees: Sequence, w: np.ndarray):
-    """Dataset-weighted parameter average over a list of pytrees (Eq. 1)."""
-    out = trees[0]
-    out = jax.tree.map(lambda x: x.astype(jnp.float32) * float(w[0]), out)
-    for t, wi in zip(trees[1:], w[1:]):
-        out = jax.tree.map(lambda a, x: a + x.astype(jnp.float32) * float(wi),
-                           out, t)
-    ref = trees[0]
+# The mul and add phases are SEPARATE jits on purpose: inside one compiled
+# program XLA clones each product into the consumer fusion and the CPU
+# emitter contracts mul+add into an FMA (optimization_barrier does not
+# survive the duplication), which diverges from the seed's op-per-dispatch
+# execution by 1 ulp. Muls alone and adds alone are bitwise exact, so the
+# two-dispatch split keeps the seed fold's values while replacing K x leaves
+# host-scalar dispatches with 2 (regression-tested in tests/test_quant.py).
+
+
+def _weighted_avg_products(trees: Tuple, w):
+    return tuple(jax.tree.map(lambda x: x.astype(jnp.float32) * w[i], t)
+                 for i, t in enumerate(trees))
+
+
+def _weighted_avg_sum(prods: Tuple, ref):
+    out = prods[0]
+    for p in prods[1:]:
+        out = jax.tree.map(jnp.add, out, p)  # left fold, no reassociation
     return jax.tree.map(lambda a, r: a.astype(r.dtype), out, ref)
+
+
+_wavg_products_jit = jax.jit(_weighted_avg_products)
+_wavg_sum_jit = jax.jit(_weighted_avg_sum)
+
+
+def weighted_avg(trees: Sequence, w: np.ndarray):
+    """Dataset-weighted parameter average over a list of pytrees (Eq. 1) as
+    a jitted weighted sum — two dispatches per call (products, then the
+    left-fold accumulation), bit-identical to the seed's sequential
+    ``tree.map`` loop; retraces only per (cohort size, tree structure)."""
+    trees = tuple(trees)
+    prods = _wavg_products_jit(trees, jnp.asarray(np.asarray(w, np.float32)))
+    return _wavg_sum_jit(prods, trees[0])
 
 
 # ---------------------------------------------------------------------------
@@ -75,7 +103,8 @@ def weighted_avg(trees: Sequence, w: np.ndarray):
 
 def make_fused_round(loss_fn: LossFn, optimizer: Optimizer, *,
                      clip_norm: float = 10.0, unroll: Optional[bool] = None,
-                     compress_ratio: Optional[float] = None):
+                     compress_ratio: Optional[float] = None,
+                     compute_dtype: Optional[str] = None):
     """Build the single-dispatch round function.
 
     Returned callable signature::
@@ -119,17 +148,38 @@ def make_fused_round(loss_fn: LossFn, optimizer: Optimizer, *,
     rebuilt from host data every round. Params/state are NOT donated because
     a round may split into several fused cohorts (cached vs recompute
     groups) that share them.
+
+    ``compute_dtype`` (e.g. ``"bfloat16"``) switches local training to
+    mixed precision: each SGD step casts a throwaway copy of the params
+    (and the replicated frozen tree + the batch's floating leaves, minus
+    ``*_scale`` quantization scales) to the compute dtype for the
+    forward/backward, then casts the gradients back — the carried params
+    stay f32 master weights, the optimizer state is built over (and
+    updated in) f32, and the Eq. 1 aggregation is the unchanged f32 sum.
+    Default ``None`` is the exact seed-identical f32 loop.
     """
     if unroll is None:
         unroll = jax.default_backend() == "cpu"
+    cdt = jnp.dtype(compute_dtype) if compute_dtype is not None else None
+    loss_fn = make_input_cast_loss(loss_fn, compute_dtype)
 
     def local_train(params, frozen, state, batches, nb):
-        opt_state = optimizer.init(params)
+        opt_state = optimizer.init(params)  # f32 master-weight state
+        if cdt is not None:
+            frozen = cast_floating(frozen, cdt)
 
         def one(carry, batch):
             p, st, ost, t, lsum = carry
-            (loss, st2), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-                p, frozen, st, batch)
+            if cdt is None:
+                (loss, st2), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                    p, frozen, st, batch)
+            else:
+                (loss, st2), grads = jax.value_and_grad(
+                    lambda pc: loss_fn(pc, frozen, st, batch),
+                    has_aux=True)(cast_floating(p, cdt))
+                grads = jax.tree.map(lambda g, m: g.astype(m.dtype), grads, p)
+                st2 = jax.tree.map(lambda a, m: a.astype(m.dtype), st2, st)
+                loss = loss.astype(jnp.float32)
             grads, _ = clip_by_global_norm(grads, clip_norm)
             ups, ost2 = optimizer.update(grads, ost, p)
             p2 = apply_updates(p, ups)
@@ -278,6 +328,15 @@ class RoundEngine:
     updated — the round's hot path never materializes a dense per-client
     delta on host. ``last_uplink_bytes`` reports the (index, value)
     payload the round would have put on the wire.
+
+    Feature caches are TIERED (fl/quant.py): ``use_cache`` values may be a
+    tier name (``"f32"``/``"fp16"``/``"int8"``; legacy ``True`` means f32)
+    and ``features_for`` quantizes on write, so a client's shard is held at
+    the admitted precision from the moment it leaves the frozen prefix.
+    int8 dequantization is fused into the cached-consumer loss inside the
+    compiled round. ``compute_dtype`` (e.g. ``"bfloat16"``) runs local
+    forward/backward in mixed precision with f32 master params/optimizer
+    state and f32 Eq. 1 aggregation (``make_fused_round``).
     """
     loss_fn: LossFn
     optimizer: Optimizer
@@ -289,25 +348,83 @@ class RoundEngine:
     clip_norm: float = 10.0
     fused: bool = True
     compress_ratio: Optional[float] = None
+    compute_dtype: Optional[str] = None
     last_uplink_bytes: int = 0
-    _features: Dict[int, np.ndarray] = field(default_factory=dict, repr=False)
+    _features: Dict[int, EncodedFeatures] = field(default_factory=dict,
+                                                  repr=False)
+    _cache_version: int = field(default=0, repr=False)
+    _cache_saved_version: int = field(default=-1, repr=False)
     _jit_cache: Dict[str, Callable] = field(default_factory=dict, repr=False)
     _res_pool: List = field(default_factory=list, repr=False)   # per leaf [cap, L]
     _res_row: Dict[int, int] = field(default_factory=dict, repr=False)
 
-    # ----- frozen-prefix feature cache -----
+    # ----- frozen-prefix feature cache (tiered) -----
 
-    def features_for(self, client: SimClient) -> np.ndarray:
-        """Client's shard pushed through the frozen prefix once (eval mode);
-        memoized until the engine (== the stage) is replaced."""
-        if client.client_id not in self._features:
+    def features_for(self, client: SimClient,
+                     tier: str = "f32") -> EncodedFeatures:
+        """Client's shard pushed through the frozen prefix once (eval mode)
+        and encoded at ``tier`` on write; memoized until the engine (== the
+        stage) is replaced. A tier change re-extracts and re-encodes (does
+        not happen mid-stage: admission is decided per stage)."""
+        enc = self._features.get(client.client_id)
+        if enc is None or enc.tier != tier:
             fn = self._jit_cache.setdefault("feature", jax.jit(self.feature_fn))
-            self._features[client.client_id] = np.asarray(
-                fn(jnp.asarray(client.data["x"])))
-        return self._features[client.client_id]
+            enc = encode_features(
+                np.asarray(fn(jnp.asarray(client.data["x"]))), tier)
+            self._features[client.client_id] = enc
+            self._cache_version += 1
+        return enc
 
     def cache_nbytes(self) -> int:
+        """Resident cache footprint at the ACTUAL stored dtypes (int8
+        values + their f32 scale vectors count as stored, not as the f32
+        equivalent)."""
         return sum(f.nbytes for f in self._features.values())
+
+    def cache_tiers(self) -> Dict[int, str]:
+        """Tier actually stored per cached client."""
+        return {cid: enc.tier for cid, enc in self._features.items()}
+
+    def cache_state(self) -> Optional[Dict[str, np.ndarray]]:
+        """Per-client tier assignments + encoded features (incl. int8 quant
+        scales) as checkpointable arrays — a resumed run consumes the exact
+        bytes the crashed run trained on, so bit-identical resume holds
+        across a tier decision. None when nothing is cached yet."""
+        if not self._features:
+            return None
+        cids = sorted(self._features)
+        out = {"ids": np.asarray(cids, np.int64),
+               "tiers": np.asarray([CACHE_TIERS.index(self._features[c].tier)
+                                    for c in cids], np.int64)}
+        for i, cid in enumerate(cids):
+            enc = self._features[cid]
+            out[f"val{i}"] = np.asarray(enc.values)
+            if enc.scale is not None:
+                out[f"scale{i}"] = np.asarray(enc.scale)
+        return out
+
+    def cache_state_if_changed(self) -> Optional[Dict[str, np.ndarray]]:
+        """``cache_state`` only when the cache changed since the last call.
+        Within a stage the cache is immutable once every participant is
+        encoded, so checkpoints stop re-writing identical feature bytes
+        every round; a checkpoint without a ``cache`` subtree resumes by
+        recomputing the features from the restored frozen tree, which is
+        deterministic (bit-identical on the same backend)."""
+        if not self._features or self._cache_version == self._cache_saved_version:
+            return None
+        self._cache_saved_version = self._cache_version
+        return self.cache_state()
+
+    def load_cache_state(self, tree: Dict[str, np.ndarray]) -> None:
+        """Restore ``cache_state`` output."""
+        self._features = {}
+        tiers = np.asarray(tree["tiers"])
+        for i, cid in enumerate(np.asarray(tree["ids"])):
+            self._features[int(cid)] = EncodedFeatures(
+                CACHE_TIERS[int(tiers[i])], np.asarray(tree[f"val{i}"]),
+                (np.asarray(tree[f"scale{i}"]) if f"scale{i}" in tree
+                 else None))
+        self._cache_version += 1
 
     # ----- error-feedback residual state (on-device, per client) -----
 
@@ -406,24 +523,27 @@ class RoundEngine:
                   sequential: Optional[bool] = None
                   ) -> Tuple[Any, Any, Dict[int, float]]:
         """One federated round over ``selected``. Returns (params, state,
-        per-client mean loss). Splits the cohort into a cached-feature group
-        and a recompute group (their batch shapes differ), runs each as one
-        fused dispatch, and combines the group aggregates by total weight —
-        algebraically the same Eq. 1 average as a single flat cohort."""
+        per-client mean loss). Splits the cohort into per-cache-tier groups
+        plus a recompute group (their batch shapes/dtypes differ), runs each
+        as one fused dispatch, and combines the group aggregates by total
+        weight — algebraically the same Eq. 1 average as a single flat
+        cohort. ``use_cache`` values are tier names (legacy booleans still
+        accepted: ``True`` == the exact f32 tier)."""
         use_cache = use_cache or {}
         seq = (not self.fused) if sequential is None else sequential
         self.last_uplink_bytes = 0
-        groups: Dict[bool, List[int]] = {}
+        groups: Dict[Optional[str], List[int]] = {}
         for cid in selected:
-            cached = bool(use_cache.get(cid)) and self.cached_loss_fn is not None
-            groups.setdefault(cached, []).append(cid)
+            tier = (normalize_tier(use_cache.get(cid))
+                    if self.cached_loss_fn is not None else None)
+            groups.setdefault(tier, []).append(cid)
 
         partials = []  # (agg_params, agg_state, group_weight)
         losses: Dict[int, float] = {}
-        for cached, cids in groups.items():
+        for tier, cids in groups.items():
             runner = self._run_sequential if seq else self._run_fused
             p_g, s_g, l_g, w_g = runner(clients, cids, params, state,
-                                        round_idx, cached=cached)
+                                        round_idx, tier=tier)
             partials.append((p_g, s_g, w_g))
             losses.update(l_g)
         if len(partials) == 1:
@@ -435,14 +555,22 @@ class RoundEngine:
 
     # ----- fused path -----
 
-    def _client_arrays(self, client: SimClient, cached: bool) -> Dict[str, np.ndarray]:
-        if cached:
+    def _client_arrays(self, client: SimClient,
+                       tier: Optional[str]) -> Dict[str, np.ndarray]:
+        if tier is not None:
             data = dict(client.data)
-            data["x"] = self.features_for(client)
+            data.update(feature_batch_arrays(self.features_for(client, tier)))
             return data
         return client.data
 
-    def _run_fused(self, clients, cids, params, state, round_idx, *, cached):
+    def _group_loss_fn(self, tier: Optional[str]) -> LossFn:
+        """The group's loss: cached groups consume encoded features with
+        dequantization fused in-graph (fl/quant.make_tiered_loss)."""
+        if tier is None:
+            return self.loss_fn
+        return make_tiered_loss(self.cached_loss_fn, tier, self.compute_dtype)
+
+    def _run_fused(self, clients, cids, params, state, round_idx, *, tier):
         bs, ep = self.batch_size, self.local_epochs
         plans = {cid: batch_index_plan(clients[cid].num_samples, bs, ep,
                                        clients[cid].round_seed(round_idx))
@@ -450,11 +578,11 @@ class RoundEngine:
         nb_live = np.asarray([len(plans[cid]) for cid in cids], np.int32)
         nb = max(int(nb_live.max()), 1)
         stacked: Dict[str, np.ndarray] = {}
-        sample = self._client_arrays(clients[cids[0]], cached)
+        sample = self._client_arrays(clients[cids[0]], tier)
         for key in sample:
             rows = []
             for cid in cids:
-                data = self._client_arrays(clients[cid], cached)[key]
+                data = self._client_arrays(clients[cid], tier)[key]
                 plan = plans[cid]
                 # pad exhausted clients by cycling their plan (masked anyway)
                 idx = np.stack([plan[t % len(plan)] if plan
@@ -464,13 +592,15 @@ class RoundEngine:
             stacked[key] = np.stack(rows)
         weights = np.asarray([clients[cid].num_samples for cid in cids],
                              np.float32)
-        key = "fused_cached" if cached else "fused"
+        key = "fused" if tier is None else f"fused_cached_{tier}"
         fn = self._jit_cache.get(key)
         if fn is None:
-            fn = make_fused_round(self.cached_loss_fn if cached else self.loss_fn,
+            fn = make_fused_round(self._group_loss_fn(tier),
                                   self.optimizer, clip_norm=self.clip_norm,
-                                  compress_ratio=self.compress_ratio)
+                                  compress_ratio=self.compress_ratio,
+                                  compute_dtype=self.compute_dtype)
             self._jit_cache[key] = fn
+        cached = tier is not None
         frozen = {} if cached else (self.frozen if self.frozen is not None else {})
         args = (params, frozen, state,
                 {k: jnp.asarray(v) for k, v in stacked.items()},
@@ -488,15 +618,30 @@ class RoundEngine:
 
     # ----- sequential escape hatch (deadline/straggler path) -----
 
-    def _seq_step(self, cached: bool):
-        key = "seq_cached" if cached else "seq"
+    def _seq_step(self, tier: Optional[str]):
+        key = "seq" if tier is None else f"seq_cached_{tier}"
         fn = self._jit_cache.get(key)
         if fn is None:
-            loss_fn = self.cached_loss_fn if cached else self.loss_fn
+            loss_fn = make_input_cast_loss(self._group_loss_fn(tier),
+                                           self.compute_dtype)
+            cdt = (jnp.dtype(self.compute_dtype)
+                   if self.compute_dtype is not None else None)
 
             def step(p, frozen, st, ost, batch):
-                (loss, st2), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-                    p, frozen, st, batch)
+                if cdt is None:
+                    (loss, st2), grads = jax.value_and_grad(
+                        loss_fn, has_aux=True)(p, frozen, st, batch)
+                else:
+                    # mixed precision mirrors make_fused_round: bf16
+                    # forward/backward, f32 master params + optimizer state
+                    (loss, st2), grads = jax.value_and_grad(
+                        lambda pc: loss_fn(pc, cast_floating(frozen, cdt),
+                                           st, batch),
+                        has_aux=True)(cast_floating(p, cdt))
+                    grads = jax.tree.map(lambda g, m: g.astype(m.dtype),
+                                         grads, p)
+                    st2 = jax.tree.map(lambda a, m: a.astype(m.dtype), st2, st)
+                    loss = loss.astype(jnp.float32)
                 grads, _ = clip_by_global_norm(grads, self.clip_norm)
                 ups, ost2 = self.optimizer.update(grads, ost, p)
                 return apply_updates(p, ups), st2, ost2, loss
@@ -527,13 +672,14 @@ class RoundEngine:
             fn = self._jit_cache["seq_compress"] = jax.jit(comp)
         return fn
 
-    def _run_sequential(self, clients, cids, params, state, round_idx, *, cached):
-        step = self._seq_step(cached)
-        frozen = {} if cached else (self.frozen if self.frozen is not None else {})
+    def _run_sequential(self, clients, cids, params, state, round_idx, *, tier):
+        step = self._seq_step(tier)
+        frozen = ({} if tier is not None
+                  else (self.frozen if self.frozen is not None else {}))
         updates, weights, losses = [], [], {}
         for cid in cids:
             c = clients[cid]
-            data = self._client_arrays(c, cached)
+            data = self._client_arrays(c, tier)
             p_i, s_i = params, state
             ost = self.optimizer.init(params)
             batch_losses = []
@@ -570,13 +716,23 @@ def make_lm_cached_fed_round_step(model, plan, local_opt: Optimizer, *,
                                   num_pods: int, local_steps: int,
                                   remat: bool = True, clip_norm: float = 1.0,
                                   constrain_podded=None, remat_policy=None,
-                                  donate: bool = True):
+                                  donate: bool = True,
+                                  feature_tier: str = "f32",
+                                  compute_dtype: Optional[str] = None):
     """Cached sibling of ``freezing.make_fed_round_step``: the batch carries
     ``h0``/``aux0`` (frozen-prefix outputs, computed once per stage via
     ``freezing.stage_prefix_features``) with leading dims
     [num_pods, local_steps, ...]; only the active suffix is executed and
     differentiated. Jitted with ``donate_argnums`` on the active params (the
     per-pod optimizer state is born and dies inside the jit).
+
+    ``feature_tier`` selects the cache storage precision (fl/quant.py):
+    with ``"fp16"`` the batch's ``h0`` arrives f16, with ``"int8"`` it
+    arrives int8 alongside ``h0_scale`` (``quantize_int8`` of the prefix
+    output) and is dequantized INSIDE the compiled step — the f32/bf16
+    feature tensor never exists outside the dispatch. ``compute_dtype``
+    overrides the dtype the decoded features (and the active params) are
+    evaluated in; default keeps the model's native compute dtype.
 
     Requires a static prefix — caching under a training embedding (stage 0)
     or a weight-tied shared-attention prefix (zamba2) would silently train
@@ -589,15 +745,36 @@ def make_lm_cached_fed_round_step(model, plan, local_opt: Optimizer, *,
             "extractor (training embedding or tied shared-attention in the "
             "prefix) — use freezing.make_fed_round_step instead")
 
-    loss_fn = cached_stage_loss_fn(model, plan, remat=remat,
-                                   remat_policy=remat_policy)
+    feature_tier = normalize_tier(feature_tier) or "f32"
+    base_loss = cached_stage_loss_fn(model, plan, remat=remat,
+                                     remat_policy=remat_policy)
+    h_dt = jnp.dtype(compute_dtype or model.cfg.compute_dtype)
+    cdt = jnp.dtype(compute_dtype) if compute_dtype is not None else None
+
+    def loss_fn(act, batch):
+        if feature_tier == "f32":
+            return base_loss(act, batch)
+        b = dict(batch)
+        if feature_tier == "int8":
+            b["h0"] = (b["h0"].astype(jnp.float32)
+                       * b.pop("h0_scale").astype(jnp.float32)).astype(h_dt)
+        else:  # fp16
+            b["h0"] = b["h0"].astype(h_dt)
+        return base_loss(act, b)
 
     def local_train(active, batches):
         opt_state = local_opt.init(active)
 
         def one(carry, batch):
             act, ost = carry
-            loss, grads = jax.value_and_grad(loss_fn)(act, batch)
+            if cdt is None:
+                loss, grads = jax.value_and_grad(loss_fn)(act, batch)
+            else:
+                loss, grads = jax.value_and_grad(loss_fn)(
+                    cast_floating(act, cdt), batch)
+                grads = jax.tree.map(lambda g, m: g.astype(m.dtype),
+                                     grads, act)
+                loss = loss.astype(jnp.float32)
             grads, _ = clip_by_global_norm(grads, clip_norm)
             ups, ost = local_opt.update(grads, ost, act)
             return (apply_updates(act, ups), ost), loss

@@ -1,0 +1,196 @@
+"""Precision tiers for the frozen-prefix activation cache (+ bf16 compute).
+
+SmartFreeze's headline claim is the memory one (Eq. 4, up to 82% footprint
+reduction), and once later stages train over cached frozen-prefix features
+(fl/engine.py), the feature tensor becomes the dominant per-client memory
+term. This module shrinks it:
+
+  tier "f32"   4 bytes/elem — the PR-1 behavior, exact.
+  tier "fp16"  2 bytes/elem — plain dtype narrowing, no extra state.
+  tier "int8"  1 byte/elem  — per-(sample, channel) symmetric quantization:
+               q = clip(round(x / s), -127, 127), s = amax / 127 computed
+               over each sample's interior axes per channel, so a client
+               shard [N, H, W, C] stores int8 values plus f32 scales
+               [N, 1, 1, C] (LM features [N, S, D] store scales [N, 1, D]).
+
+Dequantization is FUSED INTO THE CACHED-CONSUMER LOSS via
+``make_tiered_loss``: the compiled round receives the int8 values + scales
+and multiplies them back inside the jitted dispatch, so the f32 feature
+tensor never materializes outside the compiled round (XLA fuses the
+broadcast-multiply into the first consumer). The f32 round-trip error is
+elementwise bounded by s/2 = amax/254 per (sample, channel) group
+(property-tested in tests/test_quant.py).
+
+``make_input_cast_loss`` is the bf16 half of the memory story: it casts the
+batch's floating leaves to a compute dtype inside the graph, pairing with
+``make_fused_round(compute_dtype=...)``'s f32-master-weights loop so local
+training runs bf16 forward/backward while optimizer state, Eq. 1
+aggregation, and the parameter stream stay f32.
+
+The admission ladder (which tier a client is granted) lives with the
+memory model: ``core.memory_model.cache_tier_ladder`` on the host and
+``core.selector.vectorized.assign_cache_tiers`` as the O(N) population
+kernel. Scale arrays ride the same per-sample indexing as the data
+(``x_scale`` is gathered by the identical minibatch plan as ``x``), which
+is what lets both the fused and sequential round paths consume tiered
+caches without special-casing.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Tier ladder in ADMISSION ORDER: the server tries the most exact tier
+# first and degrades until the client's memory fits. The table itself lives
+# with the memory model (core/ must not import fl/) — re-exported here as
+# the quantization API's vocabulary.
+from repro.core.memory_model import (CACHE_TIER_DTYPES as TIER_DTYPES,  # noqa: E402
+                                     CACHE_TIERS)
+
+
+def normalize_tier(tier) -> Optional[str]:
+    """Canonicalize a cache-plan entry: legacy ``True`` means the f32 tier
+    (pre-tier servers passed booleans), falsy means "no cache"."""
+    if tier is None or tier is False or (isinstance(tier, np.bool_) and not tier):
+        return None
+    if tier is True or isinstance(tier, np.bool_):
+        return "f32"
+    if tier in CACHE_TIERS:
+        return str(tier)
+    raise ValueError(f"unknown cache tier {tier!r}; expected one of "
+                     f"{CACHE_TIERS} (or True/False)")
+
+
+def _group_axes(ndim: int) -> Tuple[int, ...]:
+    """Axes reduced per quantization group: interior axes for >=3-D
+    (per-sample, per-channel), everything but the sample axis for 2-D."""
+    if ndim < 2:
+        raise ValueError(f"feature arrays must be >=2-D, got ndim={ndim}")
+    return tuple(range(1, ndim - 1)) if ndim >= 3 else (1,)
+
+
+@jax.jit
+def quantize_int8(x):
+    """Per-(sample, channel) symmetric int8 quantization.
+
+    Returns ``(q int8, scale f32)`` with ``scale`` keeping reduced axes as
+    size-1 dims, so ``q.astype(f32) * scale`` broadcasts back and both
+    arrays index identically along the sample axis (minibatch gathers need
+    no special case). All-zero groups get scale 1.0 (q is 0 there anyway).
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=_group_axes(x.ndim), keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+@jax.jit
+def dequantize_int8(q, scale):
+    """Inverse of ``quantize_int8`` (f32). Inside a compiled loss this is a
+    fused broadcast-multiply — the dense f32 tensor exists only as an XLA
+    fusion intermediate, never as a stored buffer."""
+    return q.astype(jnp.float32) * scale
+
+
+class EncodedFeatures(NamedTuple):
+    """One client's cached prefix features at some tier (host-resident)."""
+    tier: str
+    values: np.ndarray                  # f32 | f16 | int8, sample-leading
+    scale: Optional[np.ndarray] = None  # int8 only: f32, broadcastable
+
+    @property
+    def nbytes(self) -> int:
+        return self.values.nbytes + (self.scale.nbytes
+                                     if self.scale is not None else 0)
+
+
+def encode_features(x: np.ndarray, tier: str) -> EncodedFeatures:
+    """Quantize-on-write: features leave the frozen prefix once and are
+    stored at the admitted tier."""
+    if tier == "f32":
+        return EncodedFeatures("f32", np.asarray(x, np.float32))
+    if tier == "fp16":
+        return EncodedFeatures("fp16", np.asarray(x, np.float16))
+    if tier == "int8":
+        q, s = quantize_int8(jnp.asarray(x))
+        return EncodedFeatures("int8", np.asarray(q), np.asarray(s))
+    raise ValueError(f"unknown cache tier {tier!r}")
+
+
+def decode_features(enc: EncodedFeatures) -> np.ndarray:
+    """Host-side reference inverse (tests / debugging; the training path
+    dequantizes in-graph via ``make_tiered_loss``)."""
+    if enc.tier == "int8":
+        return np.asarray(dequantize_int8(jnp.asarray(enc.values),
+                                          jnp.asarray(enc.scale)))
+    return np.asarray(enc.values, np.float32)
+
+
+def feature_batch_arrays(enc: EncodedFeatures) -> Dict[str, np.ndarray]:
+    """The data-dict entries a cached client contributes: ``x`` at the
+    stored dtype, plus ``x_scale`` for int8. Both are sample-leading, so
+    the round paths gather them with the ordinary minibatch index plan."""
+    out = {"x": enc.values}
+    if enc.scale is not None:
+        out["x_scale"] = enc.scale
+    return out
+
+
+def make_tiered_loss(loss_fn, tier: Optional[str],
+                     compute_dtype: Optional[str] = None):
+    """Wrap a cached-consumer loss so the in-graph batch carries encoded
+    features: int8 dequantizes (written inline so XLA fuses the broadcast
+    multiply straight into the first consumer), fp16 upcasts; f32/None is
+    the identity. The wrapper pops ``x_scale`` so downstream losses see the
+    same batch keys as the f32 path. With ``compute_dtype`` set, the
+    decoded features land in that dtype (the dequant arithmetic itself
+    stays f32 so the int8 scales are never degraded to bf16)."""
+    tier = normalize_tier(tier)
+    if tier in (None, "f32"):
+        return loss_fn
+    out_dt = jnp.dtype(compute_dtype) if compute_dtype else jnp.float32
+
+    def tiered(params, frozen, state, batch):
+        b = dict(batch)
+        if tier == "int8":
+            b["x"] = (b["x"].astype(jnp.float32)
+                      * b.pop("x_scale").astype(jnp.float32)).astype(out_dt)
+        else:  # fp16
+            b["x"] = b["x"].astype(out_dt)
+        return loss_fn(params, frozen, state, b)
+
+    return tiered
+
+
+def make_input_cast_loss(loss_fn, compute_dtype: Optional[str]):
+    """Cast the batch's floating leaves to ``compute_dtype`` inside the
+    graph (bf16 local training) — EXCEPT ``*_scale`` keys: quantization
+    scales must stay f32 so int8 dequantization is never degraded to bf16
+    (``make_tiered_loss`` pops them and dequantizes in f32 itself). The
+    single source of the mixed-precision batch-cast rule, shared by the
+    fused and sequential engine paths."""
+    if compute_dtype is None:
+        return loss_fn
+    dt = jnp.dtype(compute_dtype)
+
+    def cast(params, frozen, state, batch):
+        b = {k: (v.astype(dt)
+                 if (jnp.issubdtype(v.dtype, jnp.floating)
+                     and not k.endswith("_scale")) else v)
+             for k, v in batch.items()}
+        return loss_fn(params, frozen, state, b)
+
+    return cast
+
+
+def cast_floating(tree, dtype):
+    """Cast a pytree's floating leaves (mixed-precision params/frozen cast;
+    integer leaves — e.g. step counters — pass through)."""
+    dt = jnp.dtype(dtype)
+    return jax.tree.map(
+        lambda x: x.astype(dt) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree)

@@ -41,8 +41,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import freezing_cnn as fz
-from repro.core.memory_model import (cnn_feature_cache_bytes,
+from repro.core.memory_model import (CACHE_TIER_DTYPES, CACHE_TIERS,
+                                     cache_tier_ladder,
+                                     cnn_feature_cache_bytes,
                                      cnn_stage_memory_bytes)
+from repro.core.time_model import cnn_cached_compute_scale
 from repro.core.pace import PaceController
 from repro.core.selector import ParticipantSelector
 from repro.core.selector.selection import InfeasibleStageError
@@ -75,6 +78,7 @@ class RoundResult:
     duration: Optional[float] = None     # virtual seconds this round took
     virtual_time: Optional[float] = None  # virtual clock at round end
     dropped: List[int] = field(default_factory=list)  # deadline/dropout
+    cache_bytes: Optional[int] = None    # resident feature cache (stored dtype)
 
 
 def _mean_loss(losses: Dict[int, float]) -> float:
@@ -90,6 +94,9 @@ class SmartFreezeServer:
                  op_kind: str = "conv", selector: Optional[ParticipantSelector] = None,
                  deadline_factor: float = 0.0, seed: int = 0,
                  fused: bool = True, cache_features: bool = True,
+                 cache_tiers: Union[str, tuple, list] = ("f32",),
+                 compute_dtype: Optional[str] = None,
+                 cache_time_scale: bool = False,
                  compress_ratio: Optional[float] = None,
                  aggregation: Union[str, object, None] = None,
                  time_model: Optional[FleetTimeModel] = None,
@@ -108,11 +115,22 @@ class SmartFreezeServer:
         self.seed = seed
         self.fused = fused
         self.cache_features = cache_features
+        # admission ladder, most exact first. "all" = f32 -> fp16 -> int8;
+        # the ("f32",) default keeps pre-tier runs bit-identical.
+        self.cache_tiers = (CACHE_TIERS if cache_tiers == "all"
+                            else tuple(cache_tiers))
+        unknown = [t for t in self.cache_tiers if t not in CACHE_TIERS]
+        if unknown:
+            raise ValueError(f"unknown cache tiers {unknown}; "
+                             f"choose from {CACHE_TIERS}")
+        self.compute_dtype = compute_dtype
+        self.cache_time_scale = cache_time_scale
         self.compress_ratio = compress_ratio
         self.aggregation = aggregation
         self.time_model = time_model
         self.availability = availability
         self.history: List[RoundResult] = []
+        self.cache_tier_plan: Dict[int, Optional[str]] = {}  # current stage
         self._last_loss: Dict[int, float] = {}
         self.image_size = int(next(iter(self.clients.values())).data["x"].shape[1])
 
@@ -160,17 +178,27 @@ class SmartFreezeServer:
             cached_loss_fn=cached_loss, feature_fn=feature_fn,
             batch_size=self.batch_size, local_epochs=self.local_epochs,
             clip_norm=10.0, fused=self.fused,
-            compress_ratio=self.compress_ratio)
+            compress_ratio=self.compress_ratio,
+            compute_dtype=self.compute_dtype)
 
-    def _cache_plan(self, stage: int) -> Dict[int, bool]:
-        """Memory-model gate: cache only on clients whose capacity covers the
-        stage requirement PLUS their shard's prefix activations."""
+    def _cache_plan(self, stage: int) -> Dict[int, Optional[str]]:
+        """Memory-model admission ladder (Eq. 12 per tier): walk
+        ``cache_tiers`` most-exact-first and grant each client the first
+        tier whose stage requirement PLUS its shard's prefix activations at
+        that tier's storage dtype fits; ``None`` declines the cache (full
+        prefix recompute). With the default f32-only ladder this reduces to
+        the original boolean gate."""
         if not self.cache_features or stage == 0:
             return {}
-        return {cid: c.memory_bytes >= cnn_stage_memory_bytes(
+        plan = {}
+        for cid, c in self.clients.items():
+            plan[cid] = cache_tier_ladder(
+                c.memory_bytes,
+                lambda t, _n=c.num_samples: cnn_stage_memory_bytes(
                     self.model, stage, self.batch_size, self.image_size,
-                    cache_samples=c.num_samples)
-                for cid, c in self.clients.items()}
+                    cache_samples=_n, cache_dtype=CACHE_TIER_DTYPES[t]),
+                tiers=self.cache_tiers)
+        return plan
 
     # ----- main loop (one FederatedLoop per stage) -----
 
@@ -235,7 +263,12 @@ class SmartFreezeServer:
             engine = self._stage_engine(stage, frozen, state)
             if mid is not None and "ef" in restored["tree"]:
                 engine.load_ef_state(restored["tree"]["ef"])
+            if mid is not None and "cache" in restored["tree"]:
+                # resume consumes the EXACT cached bytes (tier assignments +
+                # int8 quant scales) the crashed run trained on
+                engine.load_cache_state(restored["tree"]["cache"])
             cache_ok = self._cache_plan(stage)
+            self.cache_tier_plan = cache_ok
             mem_req = cnn_stage_memory_bytes(model, stage, self.batch_size,
                                              self.image_size)
             stage_done = mid is not None and (
@@ -292,7 +325,8 @@ class SmartFreezeServer:
                                      uplink_bytes=engine.last_uplink_bytes,
                                      duration=rec.duration,
                                      virtual_time=rec.t_end,
-                                     dropped=rec.dropped)
+                                     dropped=rec.dropped,
+                                     cache_bytes=engine.cache_nbytes())
                     if eval_fn is not None and (rec.round_idx % eval_every == 0
                                                 or do_freeze):
                         merged = fz.merge_cnn_params(model, stage_base, stage,
@@ -313,6 +347,15 @@ class SmartFreezeServer:
                       if self.time_model is not None
                       else FleetTimeModel.from_clients(self.clients))
                 tm.payload_bytes = engine.per_client_uplink_bytes(active)
+                if self.cache_time_scale:
+                    # cached-mode clients skip the frozen-prefix forward
+                    # every minibatch — their local step shrinks, which
+                    # shifts round durations AND (under the deadline
+                    # policy) who makes the cut, i.e. cohort composition
+                    scale_of = {cid: cnn_cached_compute_scale(stage)
+                                for cid, t in cache_ok.items() if t}
+                    if scale_of:
+                        tm = tm.with_compute_scale(scale_of)
                 loop = FederatedLoop(
                     select_fn=select_fn, train_fn=train_fn,
                     clients=self.clients,
@@ -345,6 +388,12 @@ class SmartFreezeServer:
         ef = engine.ef_state()
         if ef is not None:
             tree["ef"] = ef
+        # only when the cache grew/re-tiered since the last save — identical
+        # feature bytes are not re-written every round (resume recomputes
+        # deterministically when the restored checkpoint has no cache)
+        cache = engine.cache_state_if_changed()
+        if cache is not None:
+            tree["cache"] = cache
         mgr.save(rec.round_idx, tree, metadata={
             "stage": stage, "round_idx": rec.round_idx,
             "r_in_stage": int(r_in_stage), "plan_rounds": int(plan_rounds),
@@ -364,6 +413,7 @@ class FedAvgServer:
                  local_epochs: int = 1, batch_size: int = 32,
                  mem_required: float = 0.0, seed: int = 0, fused: bool = True,
                  compress_ratio: Optional[float] = None,
+                 compute_dtype: Optional[str] = None,
                  aggregation: Union[str, object, None] = None,
                  time_model: Optional[FleetTimeModel] = None,
                  availability: Optional[AvailabilityTrace] = None):
@@ -377,6 +427,7 @@ class FedAvgServer:
         self.seed = seed
         self.fused = fused
         self.compress_ratio = compress_ratio
+        self.compute_dtype = compute_dtype
         self.aggregation = aggregation
         self.time_model = time_model
         self.availability = availability
@@ -394,7 +445,8 @@ class FedAvgServer:
                              batch_size=self.batch_size,
                              local_epochs=self.local_epochs,
                              clip_norm=10.0, fused=self.fused,
-                             compress_ratio=self.compress_ratio)
+                             compress_ratio=self.compress_ratio,
+                             compute_dtype=self.compute_dtype)
         rng = np.random.RandomState(self.seed)
         eligible = [cid for cid, c in self.clients.items()
                     if c.memory_bytes >= self.mem_required]

@@ -83,13 +83,32 @@ class FleetTimeModel:
     jitter: float = 0.0                    # lognormal sigma (0 = off)
     seed: int = 0
     payload_bytes: float = 0.0             # per-client uplink payload
+    compute_scale: Optional[jnp.ndarray] = None  # [N] f32 (None = ones)
     _row: Dict[int, int] = field(default_factory=dict, repr=False)
 
     def __post_init__(self):
         self.client_ids = np.asarray(self.client_ids)
         self.compute_s = jnp.asarray(self.compute_s, jnp.float32)
         self.link_rate = jnp.asarray(self.link_rate, jnp.float32)
+        if self.compute_scale is not None:
+            self.compute_scale = jnp.asarray(self.compute_scale, jnp.float32)
         self._row = {int(c): i for i, c in enumerate(self.client_ids)}
+
+    def with_compute_scale(self, scale_of: Dict[int, float]
+                           ) -> "FleetTimeModel":
+        """Copy with per-client compute-time multipliers (1.0 elsewhere) —
+        how feature-cache tier admission reaches the virtual clock: a
+        cached client's local step drops the frozen-prefix forward
+        (``core.time_model.cnn_cached_compute_scale`` /
+        ``lm_cached_compute_scale``), so rounds shorten and deadline
+        cohorts change with who got admitted."""
+        scale = np.asarray(self.compute_scale, np.float32).copy() \
+            if self.compute_scale is not None \
+            else np.ones(len(self.client_ids), np.float32)
+        for cid, s in scale_of.items():
+            scale[self._row[int(cid)]] = float(s)
+        import dataclasses as _dc
+        return _dc.replace(self, compute_scale=scale)
 
     @classmethod
     def from_clients(cls, clients, *, flops_per_sample: float = 1.0,
@@ -136,7 +155,9 @@ class FleetTimeModel:
         jit = jnp.asarray(completion_jitter(len(self.client_ids), self.seed,
                                             round_idx, self.jitter))
         up = uplink_times_vec(jnp.float32(self.payload_bytes), self.link_rate)
-        return completion_times_vec(self.compute_s, up, jit)
+        compute = (self.compute_s if self.compute_scale is None
+                   else self.compute_s * self.compute_scale)
+        return completion_times_vec(compute, up, jit)
 
     def cohort_times(self, cohort: Sequence[int], round_idx: int
                      ) -> Dict[int, float]:

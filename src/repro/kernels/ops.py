@@ -71,3 +71,23 @@ def update_sqnorm(tree_new, tree_old):
     """On-mesh half of the pace controller: fused ||new - old||^2."""
     return block_perturb.tree_diff_sqnorm(tree_new, tree_old,
                                           interpret=_default_interpret())
+
+
+# ----- int8 feature-cache quantization (reference entry) -----
+# Per-(sample, channel) symmetric int8 for the frozen-prefix activation
+# cache. No Pallas body: the op is an abs-max reduce + a broadcast multiply
+# XLA already fuses into the consumer on every backend, so the jitted jnp
+# form IS the kernel. Implementation lives in repro.fl.quant (imported
+# lazily — kernels/ stays import-independent of fl/).
+
+
+def quantize_int8(x):
+    """(q int8, scale f32) — see ``repro.fl.quant.quantize_int8``."""
+    from repro.fl.quant import quantize_int8 as impl
+    return impl(x)
+
+
+def dequantize_int8(q, scale):
+    """Fused dequant — see ``repro.fl.quant.dequantize_int8``."""
+    from repro.fl.quant import dequantize_int8 as impl
+    return impl(q, scale)

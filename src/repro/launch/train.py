@@ -43,7 +43,8 @@ def train(arch: str, *, reduced: bool = True, steps: int = 40, batch: int = 8,
           lr: float = 3e-3, ckpt_dir: Optional[str] = None,
           ckpt_every: int = 20, resume: bool = False, remat: bool = False,
           d_model: int = 0, num_layers: int = 0, log_every: int = 5,
-          pace_kwargs: Optional[dict] = None, seed: int = 0) -> dict:
+          pace_kwargs: Optional[dict] = None, seed: int = 0,
+          compute_dtype: Optional[str] = None) -> dict:
     cfg = configs.get(arch)
     if reduced:
         over = {}
@@ -52,6 +53,10 @@ def train(arch: str, *, reduced: bool = True, steps: int = 40, batch: int = 8,
         if num_layers:
             over["num_layers"] = num_layers
         cfg = cfg.reduced(**over)
+    if compute_dtype:
+        # mixed-precision tier knob: bf16 forward/backward per pod while the
+        # Eq. 1 aggregation and checkpoint stream keep the param dtype
+        cfg = dataclasses.replace(cfg, compute_dtype=compute_dtype)
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(seed))
     T = cfg.num_freeze_blocks
@@ -150,7 +155,8 @@ def train(arch: str, *, reduced: bool = True, steps: int = 40, batch: int = 8,
                           "rng": pack_rng_state(rng)},
                          metadata={"stage": _stage, "round": r,
                                    "global_round": rec.round_idx,
-                                   "frozen": bool(freeze)})
+                                   "frozen": bool(freeze),
+                                   "compute_dtype": cfg.compute_dtype})
             _box["stage_round"] = r + 1
             if freeze:
                 print(f"stage {_stage} frozen by pace controller at round {r}")
@@ -169,7 +175,8 @@ def train(arch: str, *, reduced: bool = True, steps: int = 40, batch: int = 8,
         mgr.save(global_round, {"params": params,
                                 "rng": pack_rng_state(rng)},
                  metadata={"stage": T - 1, "round": rounds_per_stage,
-                           "global_round": global_round})
+                           "global_round": global_round,
+                           "compute_dtype": cfg.compute_dtype})
         mgr.wait()
     return {"params": params, "history": history, "config": cfg}
 
@@ -190,11 +197,15 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--compute-dtype", default=None,
+                    help="override the arch's compute dtype "
+                         "(e.g. bfloat16 / float32)")
     a = ap.parse_args()
     out = train(a.arch, reduced=a.reduced, steps=a.steps, batch=a.batch,
                 seq=a.seq, local_steps=a.local_steps, num_pods=a.pods,
                 lr=a.lr, ckpt_dir=a.ckpt_dir, resume=a.resume, remat=a.remat,
-                d_model=a.d_model, num_layers=a.num_layers)
+                d_model=a.d_model, num_layers=a.num_layers,
+                compute_dtype=a.compute_dtype)
     losses = [h["loss"] for h in out["history"]]
     if losses:
         print(f"finished: {len(losses)} rounds, "

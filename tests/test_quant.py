@@ -1,0 +1,439 @@
+"""Memory-tiered feature cache + bf16 mixed precision (PR 4).
+
+Covers: int8 round-trip error bound, dtype-aware memory model + admission
+ladder (host == vectorized kernel), tiered engine rounds (legacy-boolean
+compatibility, int8-vs-f32 training parity within 1 accuracy point, fused ==
+sequential), bf16 fused rounds allclose to f32 with f32 master params, the
+single-jit ``weighted_avg`` fold's bit-identity to the seed loop, cache
+state (tiers + quant scales) round-tripping through ``CheckpointManager``,
+and bit-identical resume across a tier decision."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import freezing_cnn as fz
+from repro.core.memory_model import (CACHE_TIER_DTYPES, CACHE_TIERS,
+                                     cache_tier_ladder,
+                                     cnn_feature_cache_bytes,
+                                     cnn_stage_memory_bytes,
+                                     feature_cache_bytes, stage_memory_bytes)
+from repro.data.partition import dirichlet_partition
+from repro.data.synthetic import SyntheticVision
+from repro.fl.client import fleet_population, make_client_fleet
+from repro.fl.engine import RoundEngine, weighted_avg
+from repro.fl.quant import (EncodedFeatures, decode_features, dequantize_int8,
+                            encode_features, normalize_tier, quantize_int8)
+from repro.fl.server import SmartFreezeServer
+from repro.fl.sim import FleetTimeModel
+from repro.models.cnn import CNN, CNNConfig
+from repro.optim import sgd
+
+TINY = CNNConfig("tiny_resnet", "resnet", stage_sizes=(1, 1),
+                 stage_channels=(8, 16), num_classes=4)
+
+
+@pytest.fixture(scope="module")
+def world():
+    sv = SyntheticVision(num_classes=4, image_size=16, seed=0)
+    train = sv.sample(600, seed=1)
+    test = sv.sample(200, seed=2)
+    parts = dirichlet_partition(train["y"], 6, alpha=1.0, seed=0)
+    clients = make_client_fleet(train, parts, scenario="low", seed=0)
+    model = CNN(TINY)
+    params, state = model.init(jax.random.PRNGKey(0))
+    return train, test, clients, model, params, state
+
+
+def _stage1_engine(model, frozen, state, *, fused=False, compute_dtype=None):
+    return RoundEngine(
+        loss_fn=fz.cnn_stage_loss_fn(model, 1), optimizer=sgd(0.05),
+        frozen=frozen, cached_loss_fn=fz.cnn_cached_stage_loss_fn(model, 1),
+        feature_fn=lambda x: fz.cnn_prefix_features(model, frozen, state, x, 1),
+        batch_size=32, local_epochs=1, fused=fused,
+        compute_dtype=compute_dtype)
+
+
+def _tree_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# quantization correctness
+# ---------------------------------------------------------------------------
+
+
+def test_int8_roundtrip_error_bound():
+    """|dequant(quant(x)) - x| <= scale/2 elementwise, scale = amax/127 per
+    (sample, channel) group — over shapes, magnitudes, and distributions."""
+    rng = np.random.RandomState(0)
+    shapes = [(8, 6, 6, 5), (3, 16, 16, 8), (4, 32, 12), (7, 9)]
+    for i, shape in enumerate(shapes):
+        for mag in (1e-3, 1.0, 1e4):
+            x = (rng.randn(*shape) * mag).astype(np.float32)
+            if i == 0:
+                x[:, ..., 0] = 0.0  # an all-zero channel must not NaN
+            q, s = quantize_int8(jnp.asarray(x))
+            assert np.asarray(q).dtype == np.int8
+            xr = np.asarray(dequantize_int8(q, s))
+            bound = np.broadcast_to(np.asarray(s) / 2, x.shape)
+            assert (np.abs(xr - x) <= bound + 1e-12 * mag).all(), shape
+    # heavy-tailed: outliers set the scale but the bound still holds
+    x = rng.standard_cauchy((6, 8, 8, 4)).astype(np.float32)
+    q, s = quantize_int8(jnp.asarray(x))
+    xr = np.asarray(dequantize_int8(q, s))
+    assert (np.abs(xr - x) <= np.broadcast_to(np.asarray(s) / 2, x.shape)
+            + 1e-9).all()
+
+
+def test_encode_tiers_nbytes_and_decode():
+    rng = np.random.RandomState(1)
+    x = rng.randn(50, 8, 8, 16).astype(np.float32)
+    f32 = encode_features(x, "f32")
+    f16 = encode_features(x, "fp16")
+    i8 = encode_features(x, "int8")
+    assert f32.nbytes == x.nbytes
+    assert f16.nbytes == x.nbytes // 2
+    # int8 = values + per-(sample, channel) f32 scales: >= 3.5x smaller
+    assert f32.nbytes / i8.nbytes >= 3.5
+    np.testing.assert_array_equal(decode_features(f32), x)
+    np.testing.assert_allclose(decode_features(f16), x, atol=5e-3, rtol=5e-3)
+    np.testing.assert_allclose(decode_features(i8), x, atol=0.05, rtol=0.05)
+    assert normalize_tier(True) == "f32" and normalize_tier(False) is None
+    assert normalize_tier(np.bool_(True)) == "f32"
+    with pytest.raises(ValueError):
+        normalize_tier("int4")
+
+
+# ---------------------------------------------------------------------------
+# dtype-aware memory model + admission ladder
+# ---------------------------------------------------------------------------
+
+
+def test_memory_model_dtype_aware(world):
+    _, _, _, model, _, _ = world
+    f32 = cnn_feature_cache_bytes(model, 1, 500, 16, "float32")
+    f16 = cnn_feature_cache_bytes(model, 1, 500, 16, "float16")
+    i8 = cnn_feature_cache_bytes(model, 1, 500, 16, "int8")
+    assert f32 > f16 > i8 > 0
+    assert f32 / i8 >= 3.5         # 4x minus the f32 scale vectors
+    assert f16 == f32 / 2
+    # the stage hook prices the tier the same way
+    base = cnn_stage_memory_bytes(model, 1, 32, 16)
+    for dt, cb in (("float32", f32), ("float16", f16), ("int8", i8)):
+        tot = cnn_stage_memory_bytes(model, 1, 32, 16, cache_samples=500,
+                                     cache_dtype=dt)
+        np.testing.assert_allclose(tot, base + cb)
+    # LM twin
+    lcfg = configs.get("llama3-8b").reduced(num_layers=4, num_freeze_blocks=2)
+    lf32 = feature_cache_bytes(lcfg, 4096, "float32")
+    li8 = feature_cache_bytes(lcfg, 4096, "int8", scale_vectors=32)
+    assert lf32 / li8 >= 3.5
+    lm = stage_memory_bytes(lcfg, 1, batch=2, seq=128, cache_tokens=4096,
+                            cache_dtype="int8")
+    assert lm["feature_cache"] == li8
+
+
+def test_server_admission_ladder(world):
+    _, _, clients, model, _, _ = world
+    clients = [dataclasses.replace(c) for c in clients]
+    need = lambda c, dt: cnn_stage_memory_bytes(
+        model, 1, 32, 16, cache_samples=c.num_samples, cache_dtype=dt)
+    base = cnn_stage_memory_bytes(model, 1, 32, 16)
+    clients[0].memory_bytes = need(clients[0], "int8") + 1.0
+    clients[1].memory_bytes = need(clients[1], "float16") + 1.0
+    clients[2].memory_bytes = need(clients[2], "float32") + 1.0
+    clients[3].memory_bytes = base + 1.0   # fits the stage but no cache
+    srv = SmartFreezeServer(model, clients, cache_tiers="all")
+    plan = srv._cache_plan(1)
+    assert (plan[0], plan[1], plan[2], plan[3]) == ("int8", "fp16", "f32",
+                                                    None)
+    # default ladder is f32-only — exactly the pre-tier boolean gate
+    srv_d = SmartFreezeServer(model, clients)
+    plan_d = srv_d._cache_plan(1)
+    assert plan_d[0] is None and plan_d[1] is None and plan_d[2] == "f32"
+    assert srv_d._cache_plan(0) == {}
+    with pytest.raises(ValueError, match="unknown cache tiers"):
+        SmartFreezeServer(model, clients, cache_tiers=("int4",))
+    # ladder helper is order-aware
+    assert cache_tier_ladder(need(clients[0], "int8") + 1,
+                             lambda t: need(clients[0],
+                                            CACHE_TIER_DTYPES[t])) == "int8"
+
+
+def test_vectorized_tier_admission_matches_host(world):
+    from repro.core.selector.vectorized import assign_cache_tiers
+    _, _, clients, model, _, _ = world
+    clients = [dataclasses.replace(c) for c in clients]
+    rng = np.random.RandomState(3)
+    base = cnn_stage_memory_bytes(model, 1, 32, 16)
+    for c in clients:  # memories scattered across all admission outcomes
+        c.memory_bytes = base + float(rng.rand()) * 2.5 * \
+            cnn_feature_cache_bytes(model, 1, c.num_samples, 16, "float32") \
+            - float(rng.rand() < 0.25) * base
+    srv = SmartFreezeServer(model, clients, cache_tiers="all")
+    host_plan = srv._cache_plan(1)
+    pop = fleet_population(clients)
+    rates = [cnn_feature_cache_bytes(model, 1, 1, 16, CACHE_TIER_DTYPES[t])
+             for t in CACHE_TIERS]
+    idx = assign_cache_tiers(pop, base, rates)
+    vec_plan = {int(cid): (CACHE_TIERS[i] if i >= 0 else None)
+                for cid, i in zip(pop.client_ids, idx)}
+    assert vec_plan == host_plan
+    assert set(host_plan.values()) >= {"f32", None}  # scenario non-trivial
+
+
+# ---------------------------------------------------------------------------
+# tiered engine rounds
+# ---------------------------------------------------------------------------
+
+
+def test_legacy_bool_use_cache_is_f32_tier(world):
+    _, _, clients, model, params, state = world
+    by_id = {c.client_id: c for c in clients}
+    frozen, active = fz.init_cnn_stage_active(model, params, 1,
+                                              jax.random.PRNGKey(1))
+    sel = [c.client_id for c in clients[:3]]
+    a1, s1, l1 = _stage1_engine(model, frozen, state).run_round(
+        by_id, sel, active, state, 0, use_cache={cid: True for cid in sel})
+    a2, s2, l2 = _stage1_engine(model, frozen, state).run_round(
+        by_id, sel, active, state, 0, use_cache={cid: "f32" for cid in sel})
+    _tree_equal(a1, a2)
+    _tree_equal(s1, s2)
+    assert l1 == l2
+
+
+def test_int8_cached_training_within_one_point_of_f32(world):
+    """Multi-round stage-1 training on int8-cached features tracks the
+    f32-cached path: final eval accuracy within 1 point (the satellite's
+    tier-1-scale parity claim) and per-round losses stay close."""
+    _, test, clients, model, params, state = world
+    by_id = {c.client_id: c for c in clients}
+    frozen, active = fz.init_cnn_stage_active(model, params, 1,
+                                              jax.random.PRNGKey(1))
+    sel = [c.client_id for c in clients[:4]]
+
+    def run(tier, rounds=8):
+        eng = _stage1_engine(model, frozen, state)
+        a, st = active, state
+        losses = []
+        for r in range(rounds):
+            a, st, l = eng.run_round(by_id, sel, a, st, r,
+                                     use_cache={cid: tier for cid in sel})
+            losses.append(float(np.mean(list(l.values()))))
+        merged = fz.merge_cnn_params(model, params, 1, a)
+        logits, _ = model.apply(merged, st, jnp.asarray(test["x"]),
+                                train=False)
+        acc = float((jnp.argmax(logits, -1) == jnp.asarray(test["y"])).mean())
+        return acc, losses
+
+    acc_f32, loss_f32 = run("f32")
+    acc_i8, loss_i8 = run("int8")
+    assert abs(acc_f32 - acc_i8) <= 0.01, (acc_f32, acc_i8)
+    np.testing.assert_allclose(loss_i8, loss_f32, rtol=0.05, atol=0.02)
+
+
+def test_int8_fused_matches_sequential(world):
+    _, _, clients, model, params, state = world
+    by_id = {c.client_id: c for c in clients}
+    frozen, active = fz.init_cnn_stage_active(model, params, 1,
+                                              jax.random.PRNGKey(1))
+    sel = [c.client_id for c in clients[:3]]
+    cache = {cid: "int8" for cid in sel}
+    a_f, s_f, l_f = _stage1_engine(model, frozen, state, fused=True) \
+        .run_round(by_id, sel, active, state, 2, use_cache=cache)
+    a_s, s_s, l_s = _stage1_engine(model, frozen, state, fused=False) \
+        .run_round(by_id, sel, active, state, 2, use_cache=cache)
+    for x, y in zip(jax.tree.leaves(a_f), jax.tree.leaves(a_s)):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_cache_nbytes_reports_stored_dtype(world):
+    _, _, clients, model, params, state = world
+    by_id = {c.client_id: c for c in clients}
+    frozen, _ = fz.init_cnn_stage_active(model, params, 1,
+                                         jax.random.PRNGKey(1))
+    c0 = clients[0]
+    per_tier = {}
+    for tier in CACHE_TIERS:
+        eng = _stage1_engine(model, frozen, state)
+        enc = eng.features_for(c0, tier)
+        assert isinstance(enc, EncodedFeatures) and enc.tier == tier
+        per_tier[tier] = eng.cache_nbytes()
+        assert per_tier[tier] == enc.nbytes
+    assert per_tier["fp16"] == per_tier["f32"] // 2
+    assert per_tier["f32"] / per_tier["int8"] >= 3.5
+    # exact accounting: int8 stores values + f32 scale vectors
+    exp = c0.num_samples * 16 * 16 * 8 + c0.num_samples * 8 * 4
+    assert per_tier["int8"] == exp
+
+
+# ---------------------------------------------------------------------------
+# bf16 mixed precision
+# ---------------------------------------------------------------------------
+
+
+def test_bf16_fused_round_loss_allclose_f32(world):
+    _, _, clients, model, params, state = world
+    by_id = {c.client_id: c for c in clients}
+    frozen, active = fz.init_cnn_stage_active(model, params, 0,
+                                              jax.random.PRNGKey(1))
+    sel = [c.client_id for c in clients[:2]]
+
+    def eng(cd):
+        return RoundEngine(loss_fn=fz.cnn_stage_loss_fn(model, 0),
+                           optimizer=sgd(0.05), frozen=frozen, batch_size=32,
+                           local_epochs=1, fused=True, compute_dtype=cd)
+
+    a_f, s_f, l_f = eng(None).run_round(by_id, sel, active, state, 0)
+    a_b, s_b, l_b = eng("bfloat16").run_round(by_id, sel, active, state, 0)
+    for cid in sel:
+        np.testing.assert_allclose(l_b[cid], l_f[cid], rtol=2e-2, atol=2e-2)
+    # master params / BN state keep their f32 dtypes, values track f32
+    assert {str(x.dtype) for x in jax.tree.leaves(a_b)} == {"float32"}
+    assert {str(x.dtype) for x in jax.tree.leaves(s_b)} == {"float32"}
+    for x, y in zip(jax.tree.leaves(a_b), jax.tree.leaves(a_f)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=0.1,
+                                   atol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# weighted_avg: single-jit fold == seed loop, bitwise
+# ---------------------------------------------------------------------------
+
+
+def test_weighted_avg_bit_identical_to_seed_fold(world):
+    _, _, _, model, params, state = world
+
+    def seed_avg(trees, w):  # the pre-PR implementation, verbatim
+        out = jax.tree.map(lambda x: x.astype(jnp.float32) * float(w[0]),
+                           trees[0])
+        for t, wi in zip(trees[1:], w[1:]):
+            out = jax.tree.map(
+                lambda a, x: a + x.astype(jnp.float32) * float(wi), out, t)
+        return jax.tree.map(lambda a, r: a.astype(r.dtype), out, trees[0])
+
+    rng = np.random.RandomState(0)
+    for k in (1, 2, 5):
+        trees = [jax.tree.map(
+            lambda x: x + jnp.asarray(rng.randn(*x.shape), x.dtype), params)
+            for _ in range(k)]
+        w = rng.dirichlet(np.ones(k))         # float64, like the callers'
+        _tree_equal(weighted_avg(trees, w), seed_avg(trees, w))
+    # state trees (possibly empty dicts) go through the same path
+    assert weighted_avg([{} for _ in range(3)], np.ones(3) / 3) == {}
+
+
+# ---------------------------------------------------------------------------
+# serialization: tiers + quant scales through CheckpointManager
+# ---------------------------------------------------------------------------
+
+
+def test_cache_state_roundtrip_through_checkpoint(world, tmp_path):
+    from repro.checkpoint import CheckpointManager
+    _, _, clients, model, params, state = world
+    frozen, _ = fz.init_cnn_stage_active(model, params, 1,
+                                         jax.random.PRNGKey(1))
+    eng = _stage1_engine(model, frozen, state)
+    eng.features_for(clients[0], "int8")
+    eng.features_for(clients[1], "fp16")
+    eng.features_for(clients[2], "f32")
+    tree = eng.cache_state()
+    mgr = CheckpointManager(str(tmp_path / "ck"), async_save=False)
+    mgr.save(0, {"cache": tree})
+    restored = mgr.restore()["tree"]["cache"]
+    eng2 = _stage1_engine(model, frozen, state)
+    eng2.load_cache_state(restored)
+    assert eng2.cache_tiers() == eng.cache_tiers()
+    assert eng2.cache_nbytes() == eng.cache_nbytes()
+    for cid in (clients[0].client_id, clients[1].client_id,
+                clients[2].client_id):
+        a, b = eng._features[cid], eng2._features[cid]
+        assert b.values.dtype == a.values.dtype   # int8/f16 survive the disk
+        np.testing.assert_array_equal(a.values, b.values)
+        if a.scale is not None:
+            np.testing.assert_array_equal(a.scale, b.scale)
+
+
+def test_resume_across_tier_decision_bit_identical(world, tmp_path):
+    """Crash + resume mid-stage with a mixed-tier cohort (int8/fp16/f32 and
+    declined clients): loss/selection/virtual-time series and final params
+    must be bit-identical to the uninterrupted run."""
+    from repro.checkpoint import CheckpointManager
+    _, _, clients, model, params, state = world
+    clients = [dataclasses.replace(c) for c in clients]
+    need = lambda c, dt: cnn_stage_memory_bytes(
+        model, 1, 32, 16, cache_samples=c.num_samples, cache_dtype=dt)
+    clients[0].memory_bytes = need(clients[0], "int8") + 1.0
+    clients[1].memory_bytes = need(clients[1], "float16") + 1.0
+    clients[2].memory_bytes = need(clients[2], "float32") + 1.0
+    kw = dict(clients_per_round=4, batch_size=32, rounds_per_stage=3, seed=0,
+              fused=False, cache_tiers="all", cache_time_scale=True,
+              pace_kwargs=dict(min_rounds=99))
+
+    srv_a = SmartFreezeServer(model, clients, **kw)
+    out_a = srv_a.run(params, state, total_rounds=6)
+    assert {t for t in srv_a.cache_tier_plan.values()} >= {"int8", "fp16",
+                                                           "f32"}
+
+    mgr = CheckpointManager(str(tmp_path / "ck"), async_save=False)
+    srv_b = SmartFreezeServer(model, clients, **kw)
+    calls = {"n": 0}
+
+    class Crash(Exception):
+        pass
+
+    def crashing_eval(p, s, stage):
+        calls["n"] += 1
+        if calls["n"] > 4:
+            raise Crash()
+        return 0.0
+
+    with pytest.raises(Crash):
+        srv_b.run(params, state, total_rounds=6, ckpt_manager=mgr,
+                  ckpt_every=1, eval_fn=crashing_eval, eval_every=1)
+    assert 0 < len(srv_b.history) < len(out_a["history"])
+
+    srv_c = SmartFreezeServer(model, clients, **kw)
+    out_c = srv_c.run(params, state, total_rounds=6, ckpt_manager=mgr,
+                      ckpt_every=1, resume=True)
+    combined = srv_b.history + out_c["history"]
+    assert len(combined) == len(out_a["history"])
+    for a, b in zip(out_a["history"], combined):
+        assert a.selected == b.selected
+        assert a.loss == b.loss, (a.round_idx, a.loss, b.loss)
+        assert a.virtual_time == b.virtual_time
+    _tree_equal(out_a["params"], out_c["params"])
+    _tree_equal(out_a["state"], out_c["state"])
+
+
+# ---------------------------------------------------------------------------
+# tier admission reaches the virtual clock
+# ---------------------------------------------------------------------------
+
+
+def test_compute_scale_shrinks_cached_clients_time(world):
+    from repro.core.time_model import (cnn_cached_compute_scale,
+                                       lm_cached_compute_scale)
+    _, _, clients, _, _, _ = world
+    tm = FleetTimeModel.from_clients(clients)
+    tm2 = tm.with_compute_scale({clients[0].client_id:
+                                 cnn_cached_compute_scale(1)})
+    t1 = tm.cohort_times([c.client_id for c in clients[:3]], 0)
+    t2 = tm2.cohort_times([c.client_id for c in clients[:3]], 0)
+    cid0 = clients[0].client_id
+    np.testing.assert_allclose(t2[cid0], t1[cid0] * 0.75, rtol=1e-6)
+    for c in clients[1:3]:
+        assert t1[c.client_id] == t2[c.client_id]
+    assert cnn_cached_compute_scale(0) == 1.0
+    # deeper stages cache more of the forward
+    assert cnn_cached_compute_scale(3) < cnn_cached_compute_scale(1) < 1.0
+    lcfg = configs.get("llama3-8b").reduced(num_layers=4, num_freeze_blocks=2)
+    s = lm_cached_compute_scale(lcfg, 1)
+    assert 0.0 < s < 1.0
