@@ -20,6 +20,10 @@ communities) are what reproduce the paper's tables.
   cache_quant              memory-tiered feature cache: bytes + us/round per
                            tier, fleet admission f32-only vs ladder, f32 vs
                            int8 accuracy (emits BENCH_cache_quant.json)
+  shard_scale              sharded cohort execution: rounds/s at client-axis
+                           device counts {1,2,4,8} (forced host devices; run
+                           as its own process) + sharded==dense aggregate
+                           assert (emits BENCH_shard_scale.json)
 
 Run everything: ``python benchmarks/run.py``; or name a subset:
 ``python benchmarks/run.py round_engine fig10_memory``.
@@ -826,6 +830,105 @@ def sim_scale(rounds=18):
          + f";time_kernel_N{n}={kernel_us:.0f}us")
 
 
+def shard_scale(rounds=6):
+    """Sharded cohort execution (ISSUE 5): rounds/s vs client-axis devices.
+
+    Forces 8 host devices (``--xla_force_host_platform_device_count=8``,
+    set before jax initializes — run this benchmark as its own process, as
+    the CI step does) and times the fused SmartFreeze-stage round at a
+    FIXED 8-client cohort with the client axis sharded over {1, 2, 4, 8}
+    devices. Device count 1 is the exact single-device path (no shard_map);
+    every sharded count is asserted allclose (f32) against its aggregate —
+    params, BN state, and per-client losses. Writes
+    benchmarks/BENCH_shard_scale.json. BENCH_SMOKE=1 trims the timed
+    rounds. On the CPU host-device backend the curve measures dispatch +
+    partitioning overhead, not real parallel FLOPs — the trend worth
+    tracking is that sharding stays within noise of single-device at tiny
+    scale (the crossover needs real accelerators).
+    """
+    if "jax" not in sys.modules:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + " --xla_force_host_platform_device_count=8").strip()
+    import jax
+    from repro.core import freezing_cnn as fz
+    from repro.data.partition import iid_partition
+    from repro.data.synthetic import SyntheticVision
+    from repro.fl.client import make_client_fleet
+    from repro.fl.engine import RoundEngine
+    from repro.launch.mesh import make_client_mesh
+    from repro.models.cnn import CNN, CNNConfig
+    from repro.optim import sgd
+
+    smoke = bool(int(os.environ.get("BENCH_SMOKE", "0")))
+    rounds = 2 if smoke else rounds
+    n_dev = len(jax.devices())
+    counts = [c for c in (1, 2, 4, 8) if c <= n_dev]
+    if counts != [1, 2, 4, 8]:
+        print(f"# shard_scale: only {n_dev} device(s) visible (jax was "
+              "already initialized?) — timing the available counts", flush=True)
+
+    sv = SyntheticVision(num_classes=8, image_size=16)
+    train = sv.sample(768, seed=1)
+    parts = iid_partition(train["y"], 8, seed=0)
+    clients = make_client_fleet(train, parts, scenario="low", seed=0)
+    by_id = {c.client_id: c for c in clients}
+    sel = sorted(by_id)                          # fixed 8-client cohort
+    cfg = CNNConfig("rn", "resnet", stage_sizes=(1, 1),
+                    stage_channels=(12, 24), num_classes=8)
+    model = CNN(cfg)
+    params, state = model.init(jax.random.PRNGKey(0))
+    stage = 1
+    frozen, active = fz.init_cnn_stage_active(model, params, stage,
+                                              jax.random.PRNGKey(1))
+
+    def make_engine(mesh):
+        return RoundEngine(
+            loss_fn=fz.cnn_stage_loss_fn(model, stage), optimizer=sgd(0.05),
+            frozen=frozen, batch_size=32, local_epochs=1, mesh=mesh)
+
+    def tree_close(a, b):
+        return all(np.allclose(np.asarray(x, np.float32),
+                               np.asarray(y, np.float32),
+                               rtol=3e-4, atol=3e-4)
+                   for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+    # dense single-device reference aggregate for the equality contract
+    ref_p, ref_s, ref_l = make_engine(None).run_round(by_id, sel, active,
+                                                      state, 0)
+    rows = []
+    for d in counts:
+        eng = make_engine(make_client_mesh(d) if d > 1 else None)
+        a, st, l = eng.run_round(by_id, sel, active, state, 0)  # warm + check
+        agg_ok = (tree_close(a, ref_p) and tree_close(st, ref_s)
+                  and all(abs(l[c] - ref_l[c]) < 1e-3 for c in sel))
+        assert agg_ok, f"{d}-way sharded aggregate != dense single-device"
+        t0 = time.time()
+        for r in range(1, rounds + 1):
+            a, st, _ = eng.run_round(by_id, sel, a, st, r)
+        jax.tree.leaves(a)[0].block_until_ready()
+        dt = (time.time() - t0) / rounds
+        rows.append({"devices": d, "rounds_per_s": 1.0 / dt,
+                     "us_per_round": dt * 1e6, "agg_allclose": agg_ok})
+
+    out = {"smoke": smoke, "rounds_timed": rounds, "clients": len(sel),
+           "visible_devices": n_dev, "per_device_count": rows}
+    if counts == [1, 2, 4, 8]:
+        path = os.path.join(os.path.dirname(__file__),
+                            "BENCH_shard_scale.json")
+        with open(path, "w") as f:
+            json.dump(out, f, indent=1)
+    else:
+        # don't clobber the tracked {1,2,4,8} perf-trajectory artifact with
+        # a degraded sweep (jax initialized before the forced-host-device
+        # flag could land — e.g. the all-benchmarks mode)
+        print("# shard_scale: incomplete device sweep — "
+              "BENCH_shard_scale.json not written", flush=True)
+    _row("shard_scale", rows[-1]["us_per_round"],
+         ";".join(f"d={r['devices']}:rps={r['rounds_per_s']:.2f};"
+                  f"allclose={r['agg_allclose']}" for r in rows))
+
+
 BENCHES = {}
 
 
@@ -833,7 +936,7 @@ def main() -> None:
     BENCHES.update({f.__name__: f for f in (
         fig10_memory, speedup_time_model, fig9_rlcd, fig2_layer_convergence,
         kernels_microbench, round_engine, tab2_pace_ablation, tab1_fl_accuracy,
-        selector_scale, sim_scale, cache_quant)})
+        selector_scale, sim_scale, cache_quant, shard_scale)})
     names = sys.argv[1:] or list(BENCHES)
     unknown = [n for n in names if n not in BENCHES]
     if unknown:

@@ -113,6 +113,29 @@ class ClientPopulation:
                           else jnp.asarray(community_id, jnp.int32)),
             n_communities=n_communities)
 
+    def shard(self, mesh) -> "ClientPopulation":
+        """Copy with every per-client column placed along ``mesh``'s
+        ``"clients"`` axis, so the selection / admission kernels
+        (``_population_stats``, ``_tier_admission``) run SPMD over the same
+        placement the sharded round engine trains on — one fleet layout
+        from selection through aggregation.
+
+        Divisibility fallback (same discipline as ``dist.sharding
+        .make_rules``): when N does not divide the client-axis size the
+        columns are replicated instead — identical results, no
+        distribution. The stage-time memo is dropped so it recomputes on
+        the new placement."""
+        from repro.dist.sharding import shard_client_arrays
+        cols = shard_client_arrays(
+            mesh, (self.memory_bytes, self.capability, self.num_samples,
+                   self.loss_sum, self.community_id, self.last_seen,
+                   self.ef_residual_norm))
+        import dataclasses as _dc
+        return _dc.replace(
+            self, memory_bytes=cols[0], capability=cols[1],
+            num_samples=cols[2], loss_sum=cols[3], community_id=cols[4],
+            last_seen=cols[5], ef_residual_norm=cols[6], _stage_time=None)
+
     def stage_time(self, flops_per_sample: float = 1.0, rho: float = 1.0
                    ) -> jnp.ndarray:
         """Eq. 6 over the population via the shared vectorized time kernel

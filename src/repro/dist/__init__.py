@@ -1,3 +1,5 @@
-from repro.dist.sharding import (batch_spec, fsdp_tree_shardings,
-                                 logical_to_spec, make_rules, shard_batch,
-                                 tree_shardings)
+from repro.dist.sharding import (CLIENT_AXIS, batch_spec, client_axis_size,
+                                 client_spec, fsdp_tree_shardings,
+                                 logical_to_spec, make_rules, replicate,
+                                 shard_batch, shard_client_arrays,
+                                 shard_cohort, tree_shardings)

@@ -150,6 +150,63 @@ def batch_spec(mesh, nd: int) -> NamedSharding:
 
 
 # ---------------------------------------------------------------------------
+# Client-axis (federated cohort) sharding — fl/engine.py's shard_map path
+# ---------------------------------------------------------------------------
+
+#: mesh axis name for the federated cohort dimension (launch/mesh.py's
+#: ``make_client_mesh``); the fused round engine shard_maps over it
+CLIENT_AXIS = "clients"
+
+
+def client_axis_size(mesh) -> int:
+    """Size of the cohort axis on ``mesh`` (1 when absent or no mesh)."""
+    return 1 if mesh is None else _axis_size(mesh, CLIENT_AXIS)
+
+
+def client_spec(nd: int) -> P:
+    """PartitionSpec sharding the leading (client) dim of an ``nd``-rank
+    array, everything else replicated."""
+    return P(*((CLIENT_AXIS,) + (None,) * (nd - 1)))
+
+
+def shard_cohort(mesh, tree):
+    """device_put a stacked-cohort pytree (leading dim = clients, already
+    padded by the caller to a multiple of the client-axis size) partitioned
+    along the client axis."""
+    return jax.tree.map(
+        lambda x: jax.device_put(
+            x, NamedSharding(mesh, client_spec(np.ndim(x)))), tree)
+
+
+def replicate(mesh, tree):
+    """device_put a pytree fully replicated over ``mesh`` (round-start
+    params / frozen prefix / BN state in the sharded round)."""
+    return jax.tree.map(
+        lambda x: jax.device_put(x, NamedSharding(mesh, P())), tree)
+
+
+def shard_client_arrays(mesh, tree):
+    """Place per-client [N, ...] arrays (``ClientPopulation`` columns,
+    ``FleetTimeModel`` columns, error-feedback pools) along the client axis.
+
+    Same divisibility discipline as ``make_rules``: a leaf whose leading dim
+    does not divide the client-axis size is REPLICATED instead of sharded —
+    still correct, just not distributed. Identity when no client axis is
+    active (CPU tests, single device)."""
+    m = client_axis_size(mesh)
+    if m <= 1:
+        return tree
+
+    def put(x):
+        nd = np.ndim(x)
+        if nd >= 1 and np.shape(x)[0] % m == 0:
+            return jax.device_put(x, NamedSharding(mesh, client_spec(nd)))
+        return jax.device_put(x, NamedSharding(mesh, P()))
+
+    return jax.tree.map(put, tree)
+
+
+# ---------------------------------------------------------------------------
 # Activation-side constraint
 # ---------------------------------------------------------------------------
 

@@ -43,6 +43,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.dist.sharding import (CLIENT_AXIS, client_axis_size, replicate,
+                                 shard_cohort)
 from repro.fl.client import SimClient, batch_index_plan
 from repro.fl.compression import (ingraph_compress_leaf, ingraph_topk,
                                   topk_keep)
@@ -104,8 +106,29 @@ def weighted_avg(trees: Sequence, w: np.ndarray):
 def make_fused_round(loss_fn: LossFn, optimizer: Optimizer, *,
                      clip_norm: float = 10.0, unroll: Optional[bool] = None,
                      compress_ratio: Optional[float] = None,
-                     compute_dtype: Optional[str] = None):
+                     compute_dtype: Optional[str] = None,
+                     mesh=None):
     """Build the single-dispatch round function.
+
+    A minimal round — two clients, one local SGD step each on a scalar
+    least-squares loss — showing the calling convention (cohort-stacked
+    batches, per-client live-step counts, Eq. 1 weights):
+
+    >>> import jax.numpy as jnp
+    >>> from repro.optim import sgd
+    >>> def loss_fn(params, frozen, state, batch):
+    ...     err = params["w"] * batch["x"] - batch["y"]
+    ...     return jnp.mean(err ** 2), state
+    >>> round_fn = make_fused_round(loss_fn, sgd(0.1))
+    >>> params = {"w": jnp.ones(())}
+    >>> batches = {"x": jnp.ones((2, 1, 4)),   # [K=2 clients, nb=1, batch=4]
+    ...            "y": jnp.zeros((2, 1, 4))}
+    >>> p, st, losses = round_fn(params, {}, {}, batches,
+    ...                          jnp.ones(2, jnp.int32), jnp.ones(2))
+    >>> losses.shape                  # per-client mean loss
+    (2,)
+    >>> round(float(p["w"]), 3)       # w <- 1 - 0.1 * d/dw mean((w*x)^2)
+    0.8
 
     Returned callable signature::
 
@@ -157,9 +180,29 @@ def make_fused_round(loss_fn: LossFn, optimizer: Optimizer, *,
     stay f32 master weights, the optimizer state is built over (and
     updated in) f32, and the Eq. 1 aggregation is the unchanged f32 sum.
     Default ``None`` is the exact seed-identical f32 loop.
+
+    ``mesh`` (a ``launch.mesh.make_client_mesh`` mesh with a ``"clients"``
+    axis of size > 1) switches to the SHARDED cohort path: the vmapped
+    per-client local training is ``shard_map``-ped over the client axis —
+    each device trains its cohort shard against replicated params/frozen/
+    state, the Eq. 1 weight normalization and the weighted parameter/state
+    sums become per-shard partial reductions joined by ONE cross-device
+    ``psum`` per round (two for the compressed path: params + BN state),
+    and per-client losses come back partitioned along the same axis. The
+    caller pads the cohort to a multiple of the axis size with
+    ``nb_live=0`` / ``weight=0`` rows (``RoundEngine`` does this), which
+    contribute exactly zero to every reduction. Semantics are unchanged —
+    the sharded aggregate equals the single-device vmap form up to f32
+    summation order (allclose, property-tested); mesh ``None`` or a
+    size-1 client axis returns the bit-identical single-device callable.
     """
+    n_shards = client_axis_size(mesh)
     if unroll is None:
-        unroll = jax.default_backend() == "cpu"
+        unroll = n_shards <= 1 and jax.default_backend() == "cpu"
+    if n_shards > 1:
+        # the sharded path is the vmap form per shard — the CPU host loop
+        # cannot be partitioned by shard_map
+        unroll = False
     cdt = jnp.dtype(compute_dtype) if compute_dtype is not None else None
     loss_fn = make_input_cast_loss(loss_fn, compute_dtype)
 
@@ -292,9 +335,76 @@ def make_fused_round(loss_fn: LossFn, optimizer: Optimizer, *,
                 jax.tree.map(make_agg(w), out_st), losses,
                 jax.tree.unflatten(treedef, new_r))
 
+    # ----- sharded cohort path: shard_map over the client axis -----
+
+    def psum_agg(w):
+        def agg(x):
+            part = jnp.einsum("k,k...->...", w, x.astype(jnp.float32))
+            return jax.lax.psum(part, CLIENT_AXIS).astype(x.dtype)
+        return agg
+
+    def shard_train(params, frozen, state, batches, nb_live, weights):
+        """Per-device body: train this shard's K/n_shards cohort rows
+        against replicated params/frozen/state. Padded rows (nb_live=0,
+        weight=0) train nothing and weigh nothing, so the global Eq. 1
+        normalizer — one psum of the shard weight sums — sees only real
+        clients."""
+        K = nb_live.shape[0]
+        wsum = jax.lax.psum(jnp.sum(weights), CLIENT_AXIS)
+        w = (weights / wsum).astype(jnp.float32)
+        bcast = lambda x: jnp.broadcast_to(x[None], (K,) + x.shape)
+        out_p, out_st, losses = jax.vmap(
+            local_train, in_axes=(0, None, 0, 0, 0))(
+            jax.tree.map(bcast, params), frozen, jax.tree.map(bcast, state),
+            batches, nb_live)
+        return out_p, out_st, losses, w
+
+    def round_fn_sharded(params, frozen, state, batches, nb_live, weights):
+        out_p, out_st, losses, w = shard_train(params, frozen, state,
+                                               batches, nb_live, weights)
+        agg = psum_agg(w)
+        return jax.tree.map(agg, out_p), jax.tree.map(agg, out_st), losses
+
+    def round_fn_compressed_sharded(params, frozen, state, batches, nb_live,
+                                    weights, residuals):
+        out_p, out_st, losses, w = shard_train(params, frozen, state,
+                                               batches, nb_live, weights)
+        K = nb_live.shape[0]
+        p_leaves, treedef = jax.tree.flatten(params)
+        new_p, new_r = [], []
+        for p0, pk, r in zip(p_leaves, jax.tree.leaves(out_p),
+                             jax.tree.leaves(residuals)):
+            p0_flat = p0.astype(jnp.float32).reshape(-1)
+            agg_local, r_new, _, _ = ingraph_compress_leaf(
+                p0_flat, pk.astype(jnp.float32).reshape(K, -1), r, w,
+                compress_ratio)
+            # agg_local = p0 + this shard's weighted sparse scatter-add;
+            # the global Eq. 1 aggregate joins the partials with one psum
+            agg = p0_flat + jax.lax.psum(agg_local - p0_flat, CLIENT_AXIS)
+            new_p.append(agg.reshape(p0.shape).astype(p0.dtype))
+            new_r.append(r_new)
+        # BN state stays a dense weighted average (params-only uplink)
+        return (jax.tree.unflatten(treedef, new_p),
+                jax.tree.map(psum_agg(w), out_st), losses,
+                jax.tree.unflatten(treedef, new_r))
+
     # the CPU backend cannot alias donated buffers — donate only where it
     # helps; the stacked batches (and carried residuals) are rebuilt from
     # host/per-client state every round, so both are safe to donate
+    if n_shards > 1:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        rep, csp = P(), P(CLIENT_AXIS)
+        donate_ok = jax.default_backend() != "cpu"
+        if compress_ratio is not None:
+            fn = shard_map(round_fn_compressed_sharded, mesh=mesh,
+                           in_specs=(rep, rep, rep, csp, csp, csp, csp),
+                           out_specs=(rep, rep, csp, csp))
+            return jax.jit(fn, donate_argnums=(3, 6) if donate_ok else ())
+        fn = shard_map(round_fn_sharded, mesh=mesh,
+                       in_specs=(rep, rep, rep, csp, csp, csp),
+                       out_specs=(rep, rep, csp))
+        return jax.jit(fn, donate_argnums=(3,) if donate_ok else ())
     if compress_ratio is not None:
         donate = (3, 6) if jax.default_backend() != "cpu" else ()
         return jax.jit(round_fn_compressed, donate_argnums=donate)
@@ -337,6 +447,18 @@ class RoundEngine:
     compiled round. ``compute_dtype`` (e.g. ``"bfloat16"``) runs local
     forward/backward in mixed precision with f32 master params/optimizer
     state and f32 Eq. 1 aggregation (``make_fused_round``).
+
+    ``mesh`` (``launch.mesh.make_client_mesh``) switches the fused path to
+    sharded cohort execution: the engine pads each per-tier group to a
+    multiple of the client-axis size with inert rows (``nb_live=0``,
+    ``weight=0``), partitions the stacked batches / live counts / weights /
+    EF residuals along the axis, replicates params + frozen + BN state, and
+    the shard_mapped dispatch joins per-device partial aggregates with one
+    ``psum`` (see ``make_fused_round``). Mesh ``None`` (default) or a
+    size-1 axis is the exact single-device path, bit-identical to pre-mesh
+    trajectories. The sequential escape hatch ignores the mesh (it exists
+    for the deadline/straggler path, which is latency- not
+    throughput-bound).
     """
     loss_fn: LossFn
     optimizer: Optimizer
@@ -349,6 +471,7 @@ class RoundEngine:
     fused: bool = True
     compress_ratio: Optional[float] = None
     compute_dtype: Optional[str] = None
+    mesh: Any = None
     last_uplink_bytes: int = 0
     _features: Dict[int, EncodedFeatures] = field(default_factory=dict,
                                                   repr=False)
@@ -592,27 +715,65 @@ class RoundEngine:
             stacked[key] = np.stack(rows)
         weights = np.asarray([clients[cid].num_samples for cid in cids],
                              np.float32)
+        n_shards = client_axis_size(self.mesh)
+        pad = (-len(cids)) % n_shards if n_shards > 1 else 0
+        if pad:
+            # pad the cohort to a multiple of the client-axis size with
+            # inert rows: nb_live=0 masks every local step and weight=0
+            # zeroes the Eq. 1 contribution, so padded row CONTENT is never
+            # consumed (first row repeated only to keep shapes/dtypes)
+            stacked = {k: np.concatenate([v, np.repeat(v[:1], pad, axis=0)])
+                       for k, v in stacked.items()}
+            nb_live = np.concatenate([nb_live, np.zeros(pad, np.int32)])
+        w_in = (np.concatenate([weights, np.zeros(pad, np.float32)])
+                if pad else weights)
         key = "fused" if tier is None else f"fused_cached_{tier}"
         fn = self._jit_cache.get(key)
         if fn is None:
             fn = make_fused_round(self._group_loss_fn(tier),
                                   self.optimizer, clip_norm=self.clip_norm,
                                   compress_ratio=self.compress_ratio,
-                                  compute_dtype=self.compute_dtype)
+                                  compute_dtype=self.compute_dtype,
+                                  mesh=self.mesh)
             self._jit_cache[key] = fn
         cached = tier is not None
         frozen = {} if cached else (self.frozen if self.frozen is not None else {})
-        args = (params, frozen, state,
-                {k: jnp.asarray(v) for k, v in stacked.items()},
-                jnp.asarray(nb_live), jnp.asarray(weights))
+        batches = {k: jnp.asarray(v) for k, v in stacked.items()}
+        nb_dev, w_dev = jnp.asarray(nb_live), jnp.asarray(w_in)
+        if n_shards > 1:
+            # explicit placement: cohort-stacked rows partition along the
+            # client axis, model trees replicate — no implicit resharding
+            # inside the dispatch
+            params, frozen, state = replicate(self.mesh,
+                                              (params, frozen, state))
+            batches, nb_dev, w_dev = shard_cohort(self.mesh,
+                                                  (batches, nb_dev, w_dev))
+        args = (params, frozen, state, batches, nb_dev, w_dev)
         if self.compress_ratio is not None:
             residuals, rows = self._gather_residuals(cids, params)
+            if pad:
+                residuals = jax.tree.map(
+                    lambda r: jnp.concatenate(
+                        [r, jnp.zeros((pad, r.shape[1]), r.dtype)]),
+                    residuals)
+            if n_shards > 1:
+                residuals = shard_cohort(self.mesh, residuals)
             p_g, s_g, l_g, new_r = fn(*args, residuals)
+            if pad:
+                new_r = jax.tree.map(lambda r: r[:len(cids)], new_r)
+            if n_shards > 1:
+                # bring the sharded residual rows back to the resident
+                # single-device pools (one host round-trip per round; the
+                # pools themselves are not sharded — they index by client
+                # id, not cohort slot)
+                new_r = jax.tree.map(lambda r: jnp.asarray(np.asarray(r)),
+                                     new_r)
             self._scatter_residuals(rows, new_r)
         else:
             p_g, s_g, l_g = fn(*args)
         self.last_uplink_bytes += self._uplink_bytes(params, len(cids))
-        l_host = np.asarray(l_g)  # ONE blocking sync for the whole cohort
+        # ONE blocking sync for the whole cohort (padded rows sliced off)
+        l_host = np.asarray(l_g)[:len(cids)]
         return (p_g, s_g, {cid: float(l_host[i]) for i, cid in enumerate(cids)},
                 float(weights.sum()))
 

@@ -100,7 +100,8 @@ class SmartFreezeServer:
                  compress_ratio: Optional[float] = None,
                  aggregation: Union[str, object, None] = None,
                  time_model: Optional[FleetTimeModel] = None,
-                 availability: Optional[AvailabilityTrace] = None):
+                 availability: Optional[AvailabilityTrace] = None,
+                 mesh=None):
         self.model = model
         self.clients = {c.client_id: c for c in clients}
         self.optimizer_fn = optimizer_fn
@@ -129,6 +130,11 @@ class SmartFreezeServer:
         self.aggregation = aggregation
         self.time_model = time_model
         self.availability = availability
+        # client-axis mesh (launch.mesh.make_client_mesh): shard_map the
+        # fused round + the fleet time kernel over the cohort axis; None is
+        # the bit-identical single-device path. Selection stays host-side,
+        # so sharded and single-device runs pick identical cohorts.
+        self.mesh = mesh
         self.history: List[RoundResult] = []
         self.cache_tier_plan: Dict[int, Optional[str]] = {}  # current stage
         self._last_loss: Dict[int, float] = {}
@@ -179,7 +185,7 @@ class SmartFreezeServer:
             batch_size=self.batch_size, local_epochs=self.local_epochs,
             clip_norm=10.0, fused=self.fused,
             compress_ratio=self.compress_ratio,
-            compute_dtype=self.compute_dtype)
+            compute_dtype=self.compute_dtype, mesh=self.mesh)
 
     def _cache_plan(self, stage: int) -> Dict[int, Optional[str]]:
         """Memory-model admission ladder (Eq. 12 per tier): walk
@@ -360,7 +366,7 @@ class SmartFreezeServer:
                     select_fn=select_fn, train_fn=train_fn,
                     clients=self.clients,
                     client_ids=list(self.clients),
-                    aggregation=policy, time_model=tm,
+                    aggregation=policy, time_model=tm, mesh=self.mesh,
                     availability=self.availability, on_round=on_round,
                     snapshot_fn=lambda: (box["active"], box["state"]),
                     train_one_fn=train_one_fn,
@@ -416,7 +422,8 @@ class FedAvgServer:
                  compute_dtype: Optional[str] = None,
                  aggregation: Union[str, object, None] = None,
                  time_model: Optional[FleetTimeModel] = None,
-                 availability: Optional[AvailabilityTrace] = None):
+                 availability: Optional[AvailabilityTrace] = None,
+                 mesh=None):
         self.model = model
         self.clients = {c.client_id: c for c in clients}
         self.optimizer_fn = optimizer_fn
@@ -431,6 +438,7 @@ class FedAvgServer:
         self.aggregation = aggregation
         self.time_model = time_model
         self.availability = availability
+        self.mesh = mesh
         self.history: List[RoundResult] = []
 
     def run(self, params, state, *, rounds: int, eval_fn=None, eval_every=10,
@@ -446,7 +454,8 @@ class FedAvgServer:
                              local_epochs=self.local_epochs,
                              clip_norm=10.0, fused=self.fused,
                              compress_ratio=self.compress_ratio,
-                             compute_dtype=self.compute_dtype)
+                             compute_dtype=self.compute_dtype,
+                             mesh=self.mesh)
         rng = np.random.RandomState(self.seed)
         eligible = [cid for cid, c in self.clients.items()
                     if c.memory_bytes >= self.mem_required]
@@ -519,6 +528,7 @@ class FedAvgServer:
             select_fn=select_fn, train_fn=train_fn, clients=self.clients,
             client_ids=list(self.clients),
             aggregation=self.aggregation or "sync", time_model=tm,
+            mesh=self.mesh,
             availability=self.availability, on_round=on_round,
             snapshot_fn=lambda: (box["params"], box["state"]),
             train_one_fn=train_one_fn,

@@ -110,6 +110,18 @@ class FleetTimeModel:
         import dataclasses as _dc
         return _dc.replace(self, compute_scale=scale)
 
+    def shard(self, mesh) -> "FleetTimeModel":
+        """Copy with the per-client columns placed along ``mesh``'s client
+        axis (replicated when N does not divide the axis size — the
+        ``make_rules`` divisibility fallback), so the Eq. 5-7 time kernel,
+        selection, and the fused round share one placement."""
+        from repro.dist.sharding import shard_client_arrays
+        import dataclasses as _dc
+        cols = shard_client_arrays(mesh, (self.compute_s, self.link_rate,
+                                          self.compute_scale))
+        return _dc.replace(self, compute_s=cols[0], link_rate=cols[1],
+                           compute_scale=cols[2])
+
     @classmethod
     def from_clients(cls, clients, *, flops_per_sample: float = 1.0,
                      rho: float = 1.0, link_rates=None, jitter: float = 0.0,
@@ -462,7 +474,27 @@ class FederatedLoop:
     ``clients`` may be omitted (LM pod training drives the same loop with
     ``client_ids`` only). ``time_model=None`` builds the default
     ``|D_i|/c_i`` model from the fleet — identical to the seed servers'
-    straggler arithmetic — or zero times with no fleet."""
+    straggler arithmetic — or zero times with no fleet.
+
+    ``mesh`` (``launch.mesh.make_client_mesh``) shards the time model's
+    per-client columns along the cohort axis so the virtual-clock kernel
+    runs over the same placement as the sharded round engine; ``None`` is
+    the single-device default.
+
+    A minimal loop — stub hooks, three clients, zero-cost time model —
+    showing one tick per round and the policy-agnostic record it leaves:
+
+    >>> loop = FederatedLoop(
+    ...     select_fn=lambda r, avail: avail[:2],
+    ...     train_fn=lambda cohort, r, sequential=None: {c: 0.5
+    ...                                                  for c in cohort},
+    ...     client_ids=[0, 1, 2])
+    >>> recs = loop.run(2)
+    >>> [(rec.round_idx, rec.selected) for rec in recs]
+    [(0, [0, 1]), (1, [0, 1])]
+    >>> loop.clock                    # no time model -> free rounds
+    0.0
+    """
 
     select_fn: Callable[[int, List[int]], List[int]] = None
     train_fn: Callable[..., Dict[int, float]] = None
@@ -471,6 +503,7 @@ class FederatedLoop:
     aggregation: Union[str, Any] = "sync"
     time_model: Optional[FleetTimeModel] = None
     availability: Optional[AvailabilityTrace] = None
+    mesh: Any = None
     on_round: Optional[Callable[[RoundRecord], Optional[bool]]] = None
     snapshot_fn: Optional[Callable] = None
     train_one_fn: Optional[Callable] = None
@@ -487,6 +520,8 @@ class FederatedLoop:
             self.client_ids = (sorted(self.clients) if self.clients else [])
         if self.time_model is None and self.clients:
             self.time_model = FleetTimeModel.from_clients(self.clients)
+        if self.mesh is not None and self.time_model is not None:
+            self.time_model = self.time_model.shard(self.mesh)
 
     # ----- plumbing the policies call into -----
 

@@ -22,6 +22,21 @@ def make_debug_mesh(n_devices: int = 1):
     return jax.make_mesh((1, n), ("data", "model"))
 
 
+def make_client_mesh(n_devices: int | None = None):
+    """1-D mesh over the federated cohort axis (``"clients"``).
+
+    The fused round engine (``fl/engine.py``) shard_maps the per-client
+    local training over this axis: clients partition across devices, params
+    replicate, and the Eq. 1 aggregation is one cross-device ``psum``.
+    Defaults to every visible device. CPU testing forces extra host devices
+    with ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (set BEFORE
+    jax import — see tests/test_shard.py and ``benchmarks/run.py
+    shard_scale``)."""
+    avail = len(jax.devices())
+    n = avail if n_devices is None else min(n_devices, avail)
+    return jax.make_mesh((max(n, 1),), ("clients",))
+
+
 # TPU v5e hardware constants (per chip) — §Roofline denominators
 PEAK_FLOPS_BF16 = 197e12      # FLOP/s
 HBM_BW = 819e9                # B/s

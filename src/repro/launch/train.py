@@ -15,6 +15,9 @@ order mid-stage instead of restarting the stage.
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --reduced \
       --steps 40 --batch 8 --seq 128
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --reduced \
+      --steps 8 --batch 4 --seq 64 --pods 8 --mesh-clients 8
 """
 from __future__ import annotations
 
@@ -44,8 +47,32 @@ def train(arch: str, *, reduced: bool = True, steps: int = 40, batch: int = 8,
           ckpt_every: int = 20, resume: bool = False, remat: bool = False,
           d_model: int = 0, num_layers: int = 0, log_every: int = 5,
           pace_kwargs: Optional[dict] = None, seed: int = 0,
-          compute_dtype: Optional[str] = None) -> dict:
+          compute_dtype: Optional[str] = None,
+          mesh_clients: int = 0) -> dict:
     cfg = configs.get(arch)
+    mesh = None
+    if mesh_clients and mesh_clients > 1:
+        # client-axis mesh: the pod dimension (the LM loop's cross-silo
+        # "clients") partitions across devices; make_fed_round_step's
+        # vmap-over-pods then runs SPMD under GSPMD with replicated params.
+        # Pods that don't divide the axis fall back to single-device
+        # placement (the make_rules divisibility discipline).
+        from repro.dist.sharding import client_axis_size
+        from repro.launch.mesh import make_client_mesh
+        mesh = make_client_mesh(mesh_clients)
+        if client_axis_size(mesh) < mesh_clients:
+            # the easy mistake: XLA_FLAGS forcing host devices was not set
+            # before jax initialized, so fewer devices are visible than
+            # requested — say so instead of silently running smaller
+            print(f"--mesh-clients: requested {mesh_clients} devices but "
+                  f"only {client_axis_size(mesh)} visible (set XLA_FLAGS="
+                  "--xla_force_host_platform_device_count=N before jax "
+                  "initializes?)")
+        if num_pods % client_axis_size(mesh) != 0:
+            print(f"--mesh-clients: {num_pods} pods do not divide the "
+                  f"{client_axis_size(mesh)}-device client axis; running "
+                  "replicated")
+            mesh = None
     if reduced:
         over = {}
         if d_model:
@@ -131,6 +158,9 @@ def train(arch: str, *, reduced: bool = True, steps: int = 40, batch: int = 8,
             fed = {k: jnp.asarray(v).reshape(
                 (num_pods, local_steps, batch) + v.shape[1:])
                 for k, v in data.items()}
+            if mesh is not None:
+                from repro.dist.sharding import shard_cohort
+                fed = shard_cohort(mesh, fed)
             w = jnp.ones((num_pods,), jnp.float32)
             _box["active"], metrics = _step(_box["active"], _frozen, fed, w)
             loss = float(metrics["loss"])
@@ -200,12 +230,17 @@ def main():
     ap.add_argument("--compute-dtype", default=None,
                     help="override the arch's compute dtype "
                          "(e.g. bfloat16 / float32)")
+    ap.add_argument("--mesh-clients", type=int, default=0,
+                    help="shard the pod (client) axis over this many "
+                         "devices (launch.mesh.make_client_mesh); 0 = "
+                         "single-device. On CPU, force host devices with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=8")
     a = ap.parse_args()
     out = train(a.arch, reduced=a.reduced, steps=a.steps, batch=a.batch,
                 seq=a.seq, local_steps=a.local_steps, num_pods=a.pods,
                 lr=a.lr, ckpt_dir=a.ckpt_dir, resume=a.resume, remat=a.remat,
                 d_model=a.d_model, num_layers=a.num_layers,
-                compute_dtype=a.compute_dtype)
+                compute_dtype=a.compute_dtype, mesh_clients=a.mesh_clients)
     losses = [h["loss"] for h in out["history"]]
     if losses:
         print(f"finished: {len(losses)} rounds, "

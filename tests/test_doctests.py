@@ -1,0 +1,26 @@
+"""Doctest gate for the documented public API (ISSUE 5 satellite).
+
+Runs the ``>>>`` examples embedded in the three modules the architecture
+docs lean on — ``fl/engine.py`` (``make_fused_round``), ``fl/sim.py``
+(``FederatedLoop``), ``fl/quant.py`` (the tier ladder) — so the examples in
+docs/ARCHITECTURE.md's reference modules can never rot. CI additionally
+runs ``pytest --doctest-modules`` on the same files; this test keeps the
+gate inside the plain tier-1 invocation.
+"""
+import doctest
+
+import pytest
+
+import repro.fl.engine
+import repro.fl.quant
+import repro.fl.sim
+
+
+@pytest.mark.parametrize("module", [repro.fl.engine, repro.fl.sim,
+                                    repro.fl.quant],
+                         ids=lambda m: m.__name__)
+def test_module_doctests(module):
+    result = doctest.testmod(module, verbose=False)
+    assert result.attempted > 0, f"{module.__name__} lost its examples"
+    assert result.failed == 0, (f"{result.failed} doctest failure(s) in "
+                                f"{module.__name__}")
