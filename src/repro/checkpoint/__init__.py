@@ -1,2 +1,3 @@
 from repro.checkpoint.ckpt import (save_checkpoint, restore_checkpoint,
-                                   CheckpointManager, latest_step)
+                                   CheckpointManager, CheckpointCorruptError,
+                                   latest_step)

@@ -9,13 +9,24 @@ Restores re-shard onto whatever mesh the new run uses (shardings are applied
 by the caller via device_put, so pod counts can change between runs — elastic
 scaling). An async mode hands the host-transfer + write to a daemon thread so
 the train loop never blocks on I/O.
+
+Durability (ISSUE 7): every leaf carries a crc32 in the manifest, verified on
+restore — a bit-flipped or truncated .npy is detected, not silently loaded.
+``restore_checkpoint(step=None)`` and ``latest_step`` walk committed steps
+newest-first and skip torn directories (COMMIT present but manifest/leaves
+missing or corrupt — e.g. a crash between rename and COMMIT of a *previous*
+layout, or post-hoc disk damage), falling back to the last good step. Async
+save failures are captured and re-raised on ``wait()`` or the next ``save()``
+so a failed background write can't masquerade as a committed checkpoint.
 """
 from __future__ import annotations
 
 import json
+import logging
 import os
 import shutil
 import threading
+import zlib
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -31,6 +42,12 @@ _RAW_VIEW = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
 _ML_DTYPES = {"bfloat16": ml_dtypes.bfloat16,
               "float8_e4m3fn": ml_dtypes.float8_e4m3fn,
               "float8_e5m2": ml_dtypes.float8_e5m2}
+
+_log = logging.getLogger(__name__)
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A committed step failed integrity verification (crc/manifest/leaf)."""
 
 
 def _leaf_file(path) -> str:
@@ -88,9 +105,11 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Any, *,
             arr = arr.view(_RAW_VIEW[logical_dtype])
         fname = _leaf_file(path)
         np.save(os.path.join(tmp_dir, fname), arr)
+        crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
         manifest["leaves"].append({"path": list(path), "file": fname,
                                    "shape": list(arr.shape),
-                                   "dtype": logical_dtype})
+                                   "dtype": logical_dtype,
+                                   "crc32": int(crc)})
     with open(os.path.join(tmp_dir, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(step_dir):
@@ -102,9 +121,10 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Any, *,
     return commit
 
 
-def latest_step(ckpt_dir: str) -> Optional[int]:
+def _committed_steps(ckpt_dir: str) -> List[int]:
+    """Step numbers with a COMMIT marker (no integrity check)."""
     if not os.path.isdir(ckpt_dir):
-        return None
+        return []
     steps = []
     for name in os.listdir(ckpt_dir):
         if name.endswith(".COMMIT"):
@@ -112,21 +132,42 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
                 steps.append(int(name[len("step_"):-len(".COMMIT")]))
             except ValueError:
                 continue
-    return max(steps) if steps else None
+    return steps
 
 
-def restore_checkpoint(ckpt_dir: str, step: Optional[int] = None, *,
-                       shardings: Any = None) -> Dict:
-    """Returns {"tree": nested dict, "step": int, "metadata": dict}.
+def _step_intact(ckpt_dir: str, step: int) -> bool:
+    """Cheap structural check: manifest readable, every leaf file present.
+    Content checksums are verified (per-leaf) at load time."""
+    step_dir = os.path.join(ckpt_dir, f"step_{step}")
+    try:
+        with open(os.path.join(step_dir, "manifest.json")) as f:
+            manifest = json.load(f)
+        return all(os.path.isfile(os.path.join(step_dir, e["file"]))
+                   for e in manifest["leaves"])
+    except (OSError, ValueError, KeyError, TypeError):
+        return False
 
-    If ``shardings`` (a pytree of jax.sharding.Sharding matching the saved
-    tree) is given, leaves are device_put onto it — this is the elastic
-    re-shard path: the target mesh may differ from the saving run's mesh.
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    """Newest committed step whose directory is structurally intact.
+
+    A COMMIT marker whose step dir was torn (deleted leaves, truncated or
+    missing manifest) is skipped with a warning instead of being returned
+    and then exploding at restore time.
     """
-    if step is None:
-        step = latest_step(ckpt_dir)
-        if step is None:
-            raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
+    for step in sorted(_committed_steps(ckpt_dir), reverse=True):
+        if _step_intact(ckpt_dir, step):
+            return step
+        _log.warning("checkpoint step_%d is committed but torn; skipping", step)
+    return None
+
+
+def _load_step(ckpt_dir: str, step: int, shardings: Any = None) -> Dict:
+    """Load one committed step, verifying per-leaf crc32 where recorded.
+
+    Raises ``CheckpointCorruptError`` on checksum mismatch, ``OSError`` /
+    ``ValueError`` on missing or unreadable files.
+    """
     step_dir = os.path.join(ckpt_dir, f"step_{step}")
     with open(os.path.join(step_dir, "manifest.json")) as f:
         manifest = json.load(f)
@@ -137,6 +178,15 @@ def restore_checkpoint(ckpt_dir: str, step: Optional[int] = None, *,
                       ((path, leaf) for path, leaf in tree_paths(shardings))}
     for entry in manifest["leaves"]:
         arr = np.load(os.path.join(step_dir, entry["file"]))
+        # crc is computed over the raw on-disk view (pre bf16/fp8 reinterpret);
+        # manifests from before ISSUE 7 carry no crc and skip verification
+        want = entry.get("crc32")
+        if want is not None:
+            got = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+            if got != int(want):
+                raise CheckpointCorruptError(
+                    f"step_{step}/{entry['file']}: crc32 mismatch "
+                    f"(manifest {int(want)}, file {got})")
         if entry["dtype"] in _ML_DTYPES:
             arr = arr.view(_ML_DTYPES[entry["dtype"]])
         path = tuple(entry["path"])
@@ -149,6 +199,33 @@ def restore_checkpoint(ckpt_dir: str, step: Optional[int] = None, *,
     return {"tree": tree, "step": step, "metadata": manifest["metadata"]}
 
 
+def restore_checkpoint(ckpt_dir: str, step: Optional[int] = None, *,
+                       shardings: Any = None) -> Dict:
+    """Returns {"tree": nested dict, "step": int, "metadata": dict}.
+
+    If ``shardings`` (a pytree of jax.sharding.Sharding matching the saved
+    tree) is given, leaves are device_put onto it — this is the elastic
+    re-shard path: the target mesh may differ from the saving run's mesh.
+
+    With ``step=None``, committed steps are tried newest-first: a step that
+    fails integrity verification (torn dir, unreadable manifest, crc32
+    mismatch) is skipped with a warning and the previous committed step is
+    loaded instead. An explicitly requested ``step`` raises on any failure —
+    the caller asked for that exact state, silently substituting another
+    would be worse than failing.
+    """
+    if step is not None:
+        return _load_step(ckpt_dir, step, shardings)
+    candidates = sorted(_committed_steps(ckpt_dir), reverse=True)
+    for s in candidates:
+        try:
+            return _load_step(ckpt_dir, s, shardings)
+        except (OSError, ValueError, KeyError, CheckpointCorruptError) as e:
+            _log.warning("checkpoint step_%d unusable (%s); falling back to "
+                         "previous committed step", s, e)
+    raise FileNotFoundError(f"no usable committed checkpoint in {ckpt_dir}")
+
+
 class CheckpointManager:
     """Retention + async saves + resume."""
 
@@ -157,6 +234,7 @@ class CheckpointManager:
         self.keep = keep
         self.async_save = async_save
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
         os.makedirs(ckpt_dir, exist_ok=True)
 
     def save(self, step: int, tree: Any, metadata: Optional[Dict] = None):
@@ -164,20 +242,34 @@ class CheckpointManager:
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
 
         def work():
-            save_checkpoint(self.ckpt_dir, step, host_tree, metadata=metadata)
-            self._gc()
+            try:
+                save_checkpoint(self.ckpt_dir, step, host_tree,
+                                metadata=metadata)
+                self._gc()
+            except BaseException as e:  # surfaced on wait()/next save()
+                self._error = e
 
         if self.async_save:
-            self.wait()
+            self.wait()  # re-raises a previous background failure
             self._thread = threading.Thread(target=work, daemon=True)
             self._thread.start()
         else:
-            work()
+            save_checkpoint(self.ckpt_dir, step, host_tree, metadata=metadata)
+            self._gc()
 
     def wait(self):
+        """Block until the in-flight save lands; re-raise its failure.
+
+        A background exception (disk full, permission error) must not be
+        swallowed: the caller would otherwise treat the step as committed
+        and happily delete older, actually-durable checkpoints.
+        """
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError("async checkpoint save failed") from err
 
     def restore(self, step: Optional[int] = None, shardings=None) -> Dict:
         self.wait()
@@ -194,11 +286,4 @@ class CheckpointManager:
                 pass
 
     def _committed(self) -> List[int]:
-        out = []
-        for name in os.listdir(self.ckpt_dir):
-            if name.endswith(".COMMIT"):
-                try:
-                    out.append(int(name[len("step_"):-len(".COMMIT")]))
-                except ValueError:
-                    pass
-        return out
+        return _committed_steps(self.ckpt_dir)

@@ -81,6 +81,7 @@ class PaceController:
     _smoothed: List[float] = field(default_factory=list)
     _below: int = 0
     _rounds: int = 0
+    _skipped: int = 0    # non-finite observations dropped (fault screening)
 
     # ----- per-round observation -----
 
@@ -88,8 +89,18 @@ class PaceController:
         """Call once per round with the aggregated active-block params.
 
         Returns the smoothed block perturbation (None until >= 2 rounds).
+
+        Non-finite params are REJECTED, not ingested (ISSUE 7): one NaN
+        snapshot would poison every update norm it touches for the next Q
+        rounds and the smoothed series permanently — a corrupted round must
+        never be what convinces the controller a block "converged". The
+        observation is skipped (counted in ``_skipped``) and the previous
+        smoothed value is returned.
         """
         flat = _flatten(block_params)
+        if not bool(np.isfinite(flat).all()):
+            self._skipped += 1
+            return self._smoothed[-1] if self._smoothed else None
         if self.low_memory:
             return self._observe_anchored(flat)
         if self._window:
@@ -155,7 +166,8 @@ class PaceController:
     @property
     def history(self):
         return {"perturbation": list(self._perturbations),
-                "smoothed": list(self._smoothed), "rounds": self._rounds}
+                "smoothed": list(self._smoothed), "rounds": self._rounds,
+                "skipped": self._skipped}
 
     # ----- checkpoint/resume (fl/sim.py) -----
 
@@ -173,7 +185,8 @@ class PaceController:
             "update_norms": np.asarray(list(self._update_norms), np.float64),
             "perturbations": np.asarray(self._perturbations, np.float64),
             "smoothed": np.asarray(self._smoothed, np.float64),
-            "counters": np.asarray([self._below, self._rounds], np.int64),
+            "counters": np.asarray([self._below, self._rounds,
+                                    self._skipped], np.int64),
         }
         return out
 
@@ -189,8 +202,10 @@ class PaceController:
         self._perturbations = [float(x)
                                for x in np.asarray(state["perturbations"])]
         self._smoothed = [float(x) for x in np.asarray(state["smoothed"])]
-        below, rounds = (int(x) for x in np.asarray(state["counters"]))
-        self._below, self._rounds = below, rounds
+        cs = [int(x) for x in np.asarray(state["counters"])]
+        self._below, self._rounds = cs[0], cs[1]
+        # pre-ISSUE-7 checkpoints carry a 2-entry counter vector
+        self._skipped = cs[2] if len(cs) > 2 else 0
         return self
 
 

@@ -23,6 +23,13 @@ callers wanting uplink-time accounting there pass a ``time_model`` with
 ``payload_bytes`` set to their scenario's effective payload. Every baseline
 also takes ``compute_dtype`` (e.g. ``"bfloat16"``) — the engine's
 mixed-precision local-training knob with f32 master params (fl/engine.py).
+
+Fault tolerance (ISSUE 7): every baseline accepts ``faults`` (a
+``fl.faults.FaultInjector``), ``screen_updates`` and ``aggregator``
+("mean" | "trimmed_mean" | "coord_median"), threaded into the shared
+``FederatedLoop`` / ``RoundEngine`` exactly like the servers — so robustness
+comparisons against SmartFreeze run every method under the same
+deterministic fault schedule.
 """
 from __future__ import annotations
 
@@ -57,13 +64,15 @@ def scaled_config(cfg: CNNConfig, scale: float) -> CNNConfig:
 
 
 def _run_loop(clients_by_id, select_fn, train_fn, on_round, rounds, *,
-              aggregation="sync", time_model=None, availability=None):
+              aggregation="sync", time_model=None, availability=None,
+              faults=None):
     """One-liner over ``FederatedLoop`` shared by the baseline runners."""
     loop = FederatedLoop(select_fn=select_fn, train_fn=train_fn,
                          clients=clients_by_id,
                          client_ids=list(clients_by_id),
                          aggregation=aggregation, time_model=time_model,
-                         availability=availability, on_round=on_round)
+                         availability=availability, on_round=on_round,
+                         faults=faults)
     loop.run(rounds)
     return loop
 
@@ -126,7 +135,9 @@ def run_depthfl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
                 batch_size: int = 32, clients_per_round: int = 10,
                 eval_fn=None, seed: int = 0, local_epochs: int = 1,
                 fused: bool = True, compress_ratio=None, compute_dtype=None,
-                aggregation="sync", time_model=None, availability=None) -> Dict:
+                aggregation="sync", time_model=None, availability=None,
+                screen_updates: bool = False, aggregator: str = "mean",
+                faults=None) -> Dict:
     """Depth-scaled submodels: client c trains stages [0..d_c) + aux head."""
     model = CNN(cfg)
     n_stages = len(cfg.stage_sizes)
@@ -160,7 +171,8 @@ def run_depthfl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
         return RoundEngine(loss_fn=loss_fn, optimizer=sgd(0.05),
                            batch_size=batch_size, local_epochs=local_epochs,
                            fused=fused, compress_ratio=compress_ratio,
-                           compute_dtype=compute_dtype)
+                           compute_dtype=compute_dtype,
+                           screen=screen_updates, aggregator=aggregator)
 
     engines = {d: make_engine(d) for d in range(n_stages)}
     rng = np.random.RandomState(seed)
@@ -171,7 +183,7 @@ def run_depthfl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
         return list(rng.choice(avail, size=min(clients_per_round, len(avail)),
                                replace=False))
 
-    def train_fn(sel, r, sequential=None):
+    def train_fn(sel, r, sequential=None, faults=None):
         params, state = box["params"], box["state"]
         # one fused dispatch per depth group (shapes are homogeneous within)
         by_depth: Dict[int, List[int]] = {}
@@ -185,9 +197,12 @@ def run_depthfl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
                 sub["fc"] = params["fc"]
             else:
                 sub["aux"] = aux[d]
+            f_g = ({c: k for c, k in faults.items() if c in cids}
+                   if faults else None) or None
             p_g, s_g, l_g = engines[d].run_round(clients_by_id, cids, sub,
                                                  state, r,
-                                                 sequential=sequential)
+                                                 sequential=sequential,
+                                                 faults=f_g)
             W_g = float(sum(clients_by_id[c].num_samples for c in cids))
             group_out[d] = {"params": p_g, "state": s_g, "weight": W_g}
             losses.update(l_g)
@@ -218,7 +233,9 @@ def run_depthfl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
         return losses
 
     def on_round(rec):
-        rr = RoundResult(rec.round_idx, n_stages - 1, _mean_loss(rec.losses),
+        rr = RoundResult(rec.round_idx, n_stages - 1,
+                         _mean_loss(rec.losses,
+                                    prev=history[-1].loss if history else None),
                          selected=rec.selected, duration=rec.duration,
                          virtual_time=rec.t_end, dropped=rec.dropped)
         if eval_fn is not None and rec.round_idx % 10 == 0:
@@ -228,7 +245,7 @@ def run_depthfl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
 
     _run_loop(clients_by_id, select_fn, train_fn, on_round, rounds,
               aggregation=aggregation, time_model=time_model,
-              availability=availability)
+              availability=availability, faults=faults)
     return {"params": box["params"], "state": box["state"], "history": history,
             "participation": float(participation), "model": model}
 
@@ -251,7 +268,9 @@ def run_heterofl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
                  batch_size: int = 32, clients_per_round: int = 10,
                  eval_fn=None, seed: int = 0, local_epochs: int = 1,
                  fused: bool = True, compress_ratio=None, compute_dtype=None,
-                 aggregation="sync", time_model=None, availability=None) -> Dict:
+                 aggregation="sync", time_model=None, availability=None,
+                 screen_updates: bool = False, aggregator: str = "mean",
+                 faults=None) -> Dict:
     model_full = CNN(cfg)
     params_full, state_full = model_full.init(jax.random.PRNGKey(seed))
     clients_by_id = {c.client_id: c for c in clients}
@@ -275,7 +294,8 @@ def run_heterofl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
         return RoundEngine(loss_fn=loss_fn, optimizer=sgd(0.05),
                            batch_size=batch_size, local_epochs=local_epochs,
                            fused=fused, compress_ratio=compress_ratio,
-                           compute_dtype=compute_dtype)
+                           compute_dtype=compute_dtype,
+                           screen=screen_updates, aggregator=aggregator)
 
     engines = {s: make_engine(s) for s in _HFL_SCALES}
     rng = np.random.RandomState(seed)
@@ -287,7 +307,7 @@ def run_heterofl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
         return list(rng.choice(avail, size=min(clients_per_round, len(avail)),
                                replace=False))
 
-    def train_fn(sel, r, sequential=None):
+    def train_fn(sel, r, sequential=None, faults=None):
         params_full, state_full = box["params"], box["state"]
         by_scale: Dict[float, List[int]] = {}
         for cid in sel:
@@ -303,9 +323,12 @@ def run_heterofl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
                 lambda: models[sc].init(jax.random.PRNGKey(0)))
             sub = jax.tree.map(_slice_like, params_full, sub_shape)
             sub_st = jax.tree.map(_slice_like, state_full, sub_state_shape)
+            f_g = ({c: k for c, k in faults.items() if c in cids}
+                   if faults else None) or None
             p_g, s_g, l_g = engines[sc].run_round(clients_by_id, cids, sub,
                                                   sub_st, r,
-                                                  sequential=sequential)
+                                                  sequential=sequential,
+                                                  faults=f_g)
             W_g = float(sum(clients_by_id[c].num_samples for c in cids))
             losses.update(l_g)
 
@@ -328,7 +351,9 @@ def run_heterofl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
         return losses
 
     def on_round(rec):
-        rr = RoundResult(rec.round_idx, n_stages - 1, _mean_loss(rec.losses),
+        rr = RoundResult(rec.round_idx, n_stages - 1,
+                         _mean_loss(rec.losses,
+                                    prev=history[-1].loss if history else None),
                          selected=rec.selected, duration=rec.duration,
                          virtual_time=rec.t_end, dropped=rec.dropped)
         if eval_fn is not None and rec.round_idx % 10 == 0:
@@ -338,7 +363,7 @@ def run_heterofl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
 
     _run_loop(clients_by_id, select_fn, train_fn, on_round, rounds,
               aggregation=aggregation, time_model=time_model,
-              availability=availability)
+              availability=availability, faults=faults)
     return {"params": box["params"], "state": box["state"], "history": history,
             "participation": 1.0, "model": model_full}
 
@@ -376,6 +401,9 @@ def run_tifl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
     aggregation = kw.pop("aggregation", "sync")
     time_model = kw.pop("time_model", None)
     availability = kw.pop("availability", None)
+    screen_updates = kw.pop("screen_updates", False)
+    aggregator = kw.pop("aggregator", "mean")
+    faults = kw.pop("faults", None)
     if kw:
         raise TypeError(f"run_tifl: unknown kwargs {sorted(kw)}")
     # ONE engine reused across rounds (the seed rebuilt a jitted step per
@@ -383,7 +411,8 @@ def run_tifl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
     engine = RoundEngine(loss_fn=full_loss, optimizer=optimizer_fn(),
                          batch_size=batch_size, local_epochs=local_epochs,
                          fused=fused, compress_ratio=compress_ratio,
-                         compute_dtype=compute_dtype)
+                         compute_dtype=compute_dtype,
+                         screen=screen_updates, aggregator=aggregator)
     n_stages = len(cfg.stage_sizes)
     rng = np.random.RandomState(seed)
     history: List[RoundResult] = []
@@ -399,14 +428,16 @@ def run_tifl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
         return list(rng.choice(tier, size=min(clients_per_round, len(tier)),
                                replace=False))
 
-    def train_fn(sel, r, sequential=None):
+    def train_fn(sel, r, sequential=None, faults=None):
         box["params"], box["state"], losses = engine.run_round(
             clients_by_id, sel, box["params"], box["state"], r,
-            sequential=sequential)
+            sequential=sequential, faults=faults)
         return losses
 
     def on_round(rec):
-        rr = RoundResult(rec.round_idx, n_stages - 1, _mean_loss(rec.losses),
+        rr = RoundResult(rec.round_idx, n_stages - 1,
+                         _mean_loss(rec.losses,
+                                    prev=history[-1].loss if history else None),
                          selected=rec.selected, duration=rec.duration,
                          virtual_time=rec.t_end, dropped=rec.dropped)
         if eval_fn is not None and rec.round_idx % 10 == 0:
@@ -419,7 +450,7 @@ def run_tifl(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
     time_model.payload_bytes = engine.per_client_uplink_bytes(params)
     _run_loop(clients_by_id, select_fn, train_fn, on_round, rounds,
               aggregation=aggregation, time_model=time_model,
-              availability=availability)
+              availability=availability, faults=faults)
     return {"params": box["params"], "state": box["state"], "history": history,
             "participation": len(eligible) / len(clients), "model": model}
 
@@ -428,7 +459,9 @@ def run_oort(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
              batch_size: int = 32, clients_per_round: int = 10,
              eval_fn=None, seed: int = 0, local_epochs: int = 1,
              fused: bool = True, compress_ratio=None, compute_dtype=None,
-             aggregation="sync", time_model=None, availability=None) -> Dict:
+             aggregation="sync", time_model=None, availability=None,
+             screen_updates: bool = False, aggregator: str = "mean",
+             faults=None) -> Dict:
     from repro.core.selector.bandit import UtilBandit
 
     model = CNN(cfg)
@@ -446,7 +479,8 @@ def run_oort(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
     engine = RoundEngine(loss_fn=full_loss, optimizer=sgd(0.05),
                          batch_size=batch_size, local_epochs=local_epochs,
                          fused=fused, compress_ratio=compress_ratio,
-                         compute_dtype=compute_dtype)
+                         compute_dtype=compute_dtype,
+                         screen=screen_updates, aggregator=aggregator)
     history: List[RoundResult] = []
     n_stages = len(cfg.stage_sizes)
     box = {"params": params, "state": state}
@@ -454,11 +488,13 @@ def run_oort(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
     def select_fn(r, avail):
         return list(bandit.pick(avail, min(clients_per_round, len(avail))))
 
-    def train_fn(sel, r, sequential=None):
+    def train_fn(sel, r, sequential=None, faults=None):
         box["params"], box["state"], losses = engine.run_round(
             clients_by_id, sel, box["params"], box["state"], r,
-            sequential=sequential)
+            sequential=sequential, faults=faults)
         for cid, loss_i in losses.items():
+            if not np.isfinite(loss_i):
+                continue  # screened/corrupted round must not poison utility
             c = clients_by_id[cid]
             # Oort stat util: |D_i| sqrt(mean loss^2) - time penalty
             t_i = c.num_samples / c.capability
@@ -467,7 +503,9 @@ def run_oort(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
         return losses
 
     def on_round(rec):
-        rr = RoundResult(rec.round_idx, n_stages - 1, _mean_loss(rec.losses),
+        rr = RoundResult(rec.round_idx, n_stages - 1,
+                         _mean_loss(rec.losses,
+                                    prev=history[-1].loss if history else None),
                          selected=rec.selected, duration=rec.duration,
                          virtual_time=rec.t_end, dropped=rec.dropped)
         if eval_fn is not None and rec.round_idx % 10 == 0:
@@ -480,6 +518,6 @@ def run_oort(cfg: CNNConfig, clients: List[SimClient], *, rounds: int,
     time_model.payload_bytes = engine.per_client_uplink_bytes(params)
     _run_loop(clients_by_id, select_fn, train_fn, on_round, rounds,
               aggregation=aggregation, time_model=time_model,
-              availability=availability)
+              availability=availability, faults=faults)
     return {"params": box["params"], "state": box["state"], "history": history,
             "participation": len(eligible) / len(clients), "model": model}

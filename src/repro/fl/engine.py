@@ -46,6 +46,8 @@ import numpy as np
 from repro.dist.sharding import (CLIENT_AXIS, client_axis_size, replicate,
                                  shard_cohort)
 from repro.fl.client import SimClient, batch_index_plan
+from repro.fl.faults import (CORRUPT_KINDS, FAULT_CODE, apply_fault_to_update,
+                             corrupt_codes)
 from repro.fl.compression import (ingraph_compress_leaf, ingraph_topk,
                                   topk_keep)
 from repro.fl.quant import (CACHE_TIERS, EncodedFeatures, cast_floating,
@@ -99,6 +101,128 @@ def weighted_avg(trees: Sequence, w: np.ndarray):
 
 
 # ---------------------------------------------------------------------------
+# Update screening + robust aggregation (ISSUE 7: in-graph defenses)
+# ---------------------------------------------------------------------------
+
+
+AGGREGATORS = ("mean", "trimmed_mean", "coord_median")
+
+
+def _apply_fault_codes(params, out_p, losses, codes, amplify):
+    """In-graph delta-space corruption over the stacked client axis: row i
+    of every leaf gets its update delta NaN'd / Inf'd / negated / scaled
+    per ``codes[i]`` (0 = clean; fl/faults.FAULT_CODE). NaN/Inf rows also
+    poison the reported per-client loss, mirroring what genuinely
+    non-finite local gradients would do."""
+    def leaf(p0, pk):
+        p0f = p0.astype(jnp.float32)
+        d = pk.astype(jnp.float32) - p0f[None]
+        c = codes.reshape((-1,) + (1,) * (d.ndim - 1))
+        d = d * jnp.where(c == FAULT_CODE["signflip"], -1.0,
+                          jnp.where(c == FAULT_CODE["amplify"],
+                                    jnp.float32(amplify), 1.0))
+        d = jnp.where(c == FAULT_CODE["nan"], jnp.float32(jnp.nan), d)
+        d = jnp.where(c == FAULT_CODE["inf"], jnp.float32(jnp.inf), d)
+        # clean rows (code 0) keep their EXACT trained value — p0 + (pk -
+        # p0) re-rounds, which would break zero-code bit-identity
+        out = jnp.where(c == 0, pk.astype(jnp.float32), p0f[None] + d)
+        return out.astype(pk.dtype)
+
+    out_p = jax.tree.map(leaf, params, out_p)
+    bad = ((codes == FAULT_CODE["nan"]) | (codes == FAULT_CODE["inf"]))
+    return out_p, jnp.where(bad, jnp.float32(jnp.nan), losses)
+
+
+def _delta_norms(params, out_p):
+    """[K] f32 global L2 norms of each cohort row's param delta (NaN/Inf
+    anywhere in a row surfaces as a non-finite norm)."""
+    sq = None
+    for p0, pk in zip(jax.tree.leaves(params), jax.tree.leaves(out_p)):
+        d = pk.astype(jnp.float32) - p0.astype(jnp.float32)[None]
+        s = jnp.sum(d * d, axis=tuple(range(1, d.ndim)))
+        sq = s if sq is None else sq + s
+    return jnp.sqrt(sq)
+
+
+def _delta_norm_one(params, p_i):
+    """Scalar f32 global L2 norm of ONE client's param delta — the
+    per-client twin of ``_delta_norms`` for the unrolled / sequential
+    paths (same op chain per row)."""
+    sq = None
+    for p0, pk in zip(jax.tree.leaves(params), jax.tree.leaves(p_i)):
+        d = pk.astype(jnp.float32) - p0.astype(jnp.float32)
+        s = jnp.sum(d * d)
+        sq = s if sq is None else sq + s
+    return jnp.sqrt(sq)
+
+
+def _lower_median(sorted_vals, n_valid):
+    """Lower median of the first ``n_valid`` entries of an ascending-sorted
+    vector whose invalid tail is +inf (inf when nothing is valid)."""
+    return sorted_vals[jnp.maximum(n_valid - 1, 0) // 2]
+
+
+def _keep_mask(norms, losses, weights, mult):
+    """Zero-weight screening mask (applied BEFORE the Eq. 1 normalizer):
+    drop rows with a non-finite loss or delta, and rows whose delta norm
+    exceeds ``mult`` x the cohort's (lower) median norm. Inert/padded rows
+    (weight 0) are excluded from the median and never kept. With every row
+    clean the mask is all-true and ``where(mask, w, 0)`` is bitwise ``w`` —
+    the zero-fault bit-identity contract."""
+    finite = jnp.isfinite(norms) & jnp.isfinite(losses)
+    valid = finite & (weights > 0)
+    n_v = jnp.sum(valid.astype(jnp.int32))
+    med = _lower_median(jnp.sort(jnp.where(valid, norms, jnp.inf)), n_v)
+    outlier = jnp.isfinite(med) & (norms > mult * med + 1e-6)
+    return valid & ~outlier
+
+
+def _robust_leaf(x, keep, n_valid, aggregator, trim_beta):
+    """Per-coordinate robust combine of a stacked [K, ...] leaf over the
+    kept rows: ``coord_median`` (average of the two middle order
+    statistics) or ``trimmed_mean`` (drop floor(beta * n) from each end,
+    unweighted mean of the band). Masked rows sort to +inf and the order
+    statistics index only the valid prefix, so zero-weight masking composes
+    exactly as it does for the weighted mean."""
+    xf = x.astype(jnp.float32)
+    K = x.shape[0]
+    kcol = keep.reshape((K,) + (1,) * (x.ndim - 1))
+    s = jnp.sort(jnp.where(kcol, xf, jnp.inf), axis=0)
+    if aggregator == "coord_median":
+        lo = jnp.maximum(n_valid - 1, 0) // 2
+        hi = jnp.maximum(n_valid - 1, 0) - lo
+        out = (jnp.take(s, lo, axis=0) + jnp.take(s, hi, axis=0)) * 0.5
+    else:  # trimmed_mean
+        t = jnp.floor(trim_beta * n_valid.astype(jnp.float32)).astype(jnp.int32)
+        t = jnp.minimum(t, jnp.maximum(n_valid - 1, 0) // 2)
+        idx = jnp.arange(K).reshape((K,) + (1,) * (x.ndim - 1))
+        in_band = (idx >= t) & (idx < n_valid - t)
+        out = (jnp.sum(jnp.where(in_band, s, 0.0), axis=0)
+               / jnp.maximum(n_valid - 2 * t, 1).astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def _recombine_kept(params, state, out_p, out_st, k_host, weights):
+    """Host-side Eq. 1 over the KEPT rows of a screened fused round — the
+    same ``weighted_avg`` combine the sequential path uses. Zero-weight
+    masking inside the compiled aggregate would not be NaN-safe (0 x NaN =
+    NaN still poisons a fold), so excluded rows are dropped before the
+    combine. Only reached on rounds where screening actually fired (which
+    voids the bit-identity contract anyway); with every row screened out
+    the round is a no-op."""
+    if not k_host.any():
+        return params, state
+    idx = np.nonzero(k_host)[0]
+    p_host = jax.tree.map(lambda x: np.asarray(x), out_p)
+    s_host = jax.tree.map(lambda x: np.asarray(x), out_st)
+    kept_p = [jax.tree.map(lambda x: x[i], p_host) for i in idx]
+    kept_s = [jax.tree.map(lambda x: x[i], s_host) for i in idx]
+    w = np.asarray(weights, np.float64)[idx]
+    w /= w.sum()
+    return weighted_avg(kept_p, w), weighted_avg(kept_s, w)
+
+
+# ---------------------------------------------------------------------------
 # Fused multi-client round (tentpole #2)
 # ---------------------------------------------------------------------------
 
@@ -107,7 +231,11 @@ def make_fused_round(loss_fn: LossFn, optimizer: Optimizer, *,
                      clip_norm: float = 10.0, unroll: Optional[bool] = None,
                      compress_ratio: Optional[float] = None,
                      compute_dtype: Optional[str] = None,
-                     mesh=None):
+                     mesh=None, screen: bool = False,
+                     screen_norm_mult: float = 8.0,
+                     aggregator: str = "mean", trim_beta: float = 0.2,
+                     inject_faults: bool = False,
+                     fault_amplify: float = 50.0):
     """Build the single-dispatch round function.
 
     A minimal round — two clients, one local SGD step each on a scalar
@@ -195,8 +323,50 @@ def make_fused_round(loss_fn: LossFn, optimizer: Optimizer, *,
     the sharded aggregate equals the single-device vmap form up to f32
     summation order (allclose, property-tested); mesh ``None`` or a
     size-1 client axis returns the bit-identical single-device callable.
+
+    ``screen=True`` (ISSUE 7) computes an in-graph update screen alongside
+    the round: rows with a non-finite loss/delta or a delta norm past
+    ``screen_norm_mult`` x the cohort median are flagged in a trailing
+    ``keep`` [K] bool output, and the defended callable returns
+    ``(agg_params, agg_state, losses, keep)``. While every live row passes,
+    the aggregate comes from the UNTOUCHED legacy graph and is BIT-identical
+    to ``screen=False`` (regression-tested; on the unrolled CPU form this
+    costs a second local-training dispatch — the legacy fold's XLA
+    fusion/FMA lowering shifts by 1 ulp if its graph gains any output, so
+    the screen probe must be a separate jit). When screening fires, the
+    kept rows are recombined host-side via ``weighted_avg`` — NaN-safe,
+    unlike zero-weight masking (0 x NaN = NaN) — and the mesh path gathers
+    the median statistic with one ``all_gather`` so the verdict matches the
+    single-device screen. If every live row screens out, the round is a
+    no-op (params/state returned unchanged).
+
+    ``aggregator`` swaps the Eq. 1 weighted mean for a robust,
+    unweighted per-coordinate combine over the kept rows:
+    ``"trimmed_mean"`` (drop ``floor(trim_beta * n)`` order statistics from
+    each end) or ``"coord_median"``. Robust aggregators require the full
+    cohort on one device (``mesh=None``).
+
+    ``inject_faults=True`` adds an optional trailing ``fault_codes`` [K]
+    int32 argument (``fl/faults.FAULT_CODE``; pass ``None`` for a clean
+    round) that corrupts the per-client deltas IN-GRAPH after local
+    training, so injected corruption hits the screen exactly like a real
+    byzantine update.
     """
+    if aggregator not in AGGREGATORS:
+        raise ValueError(f"unknown aggregator {aggregator!r}; "
+                         f"choose from {AGGREGATORS}")
+    defended = screen or inject_faults or aggregator != "mean"
+    if compress_ratio is not None and defended:
+        raise ValueError(
+            "screening / robust aggregation / fault injection do not "
+            "compose with the compressed uplink (error-feedback residuals "
+            "would carry the corrupted signal forward); use "
+            "compress_ratio=None")
     n_shards = client_axis_size(mesh)
+    if n_shards > 1 and aggregator != "mean":
+        raise ValueError("robust aggregators need the full cohort on one "
+                         "device; use mesh=None with aggregator=" +
+                         repr(aggregator))
     if unroll is None:
         unroll = n_shards <= 1 and jax.default_backend() == "cpu"
     if n_shards > 1:
@@ -282,6 +452,109 @@ def make_fused_round(loss_fn: LossFn, optimizer: Optimizer, *,
         agg = make_agg(w)
         return jax.tree.map(agg, out_p), jax.tree.map(agg, out_st), losses
 
+    # ----- defended variants (ISSUE 7) -----
+    #
+    # The defended round must satisfy two contracts at once: (a) with zero
+    # faulty rows it is BIT-identical to the legacy round, and (b) a NaN
+    # row never reaches the returned aggregate. Zero-weight masking alone
+    # satisfies neither on its own: 0 x NaN = NaN poisons any fold, and —
+    # measured — touching the unrolled CPU fold's graph in ANY way (a
+    # keep-dependent weight chain, a trailing ``where`` select, even just
+    # returning an extra output whose computation consumes the per-client
+    # trees) perturbs XLA's fusion/FMA contraction decisions by 1 ulp.
+    # The vmap/einsum form is robust to extra outputs (verified), the
+    # unrolled fold is not. Hence the OBSERVE design:
+    #   * vmap + sharded paths: ONE dispatch that runs the legacy weight
+    #     chain + einsum/psum aggregate untouched and additionally returns
+    #     the screen verdict ``keep`` and the stacked per-client outputs.
+    #   * unrolled (CPU) path: the EXACT legacy jit computes the
+    #     aggregate, and a separate screen-probe dispatch re-runs local
+    #     training to produce (stacked outputs, keep). This doubles the
+    #     local-training compute of defended unrolled rounds — the price
+    #     of keeping the legacy fold's lowering byte-for-byte; defenses
+    #     are opt-in and the CPU path is the small-model simulator.
+    # The host wrapper accepts the legacy aggregate when every live row
+    # passed, and recombines the kept rows via ``weighted_avg`` (the
+    # sequential path's combine) when screening fired — faulty rounds
+    # carry no bit-identity contract.
+
+    def _verdict(norms, losses, weights):
+        if screen:
+            return _keep_mask(norms, losses, weights, screen_norm_mult)
+        if aggregator != "mean":
+            # robust aggregators always exclude non-finite rows (they
+            # would poison the order statistics)
+            return (jnp.isfinite(norms) & jnp.isfinite(losses)
+                    & (weights > 0))
+        # defenses off (fault injection only): corruption flows into the
+        # mean unscreened — the benchmark's divergence arm
+        return weights > 0
+
+    def train_stacked(params, frozen, state, batches, nb_live, weights,
+                      fault_codes=None):
+        """Screen probe / stacked trainer: local training with the
+        per-client results stacked, (optional) in-graph corruption, and
+        the jitted screen verdict. No aggregation — the caller combines
+        host-side."""
+        K = nb_live.shape[0]
+        if unroll:
+            outs = list(unrolled_clients(params, frozen, state, batches,
+                                         nb_live))
+            losses = jnp.stack([o[2] for o in outs])
+            out_p = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                 *[o[0] for o in outs])
+            out_st = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                  *[o[1] for o in outs])
+        else:
+            bcast = lambda x: jnp.broadcast_to(x[None], (K,) + x.shape)
+            out_p, out_st, losses = jax.vmap(
+                local_train, in_axes=(0, None, 0, 0, 0))(
+                jax.tree.map(bcast, params), frozen,
+                jax.tree.map(bcast, state), batches, nb_live)
+        if fault_codes is not None:
+            out_p, losses = _apply_fault_codes(params, out_p, losses,
+                                               fault_codes, fault_amplify)
+        norms = _delta_norms(params, out_p)
+        keep = _verdict(norms, losses, weights)
+        return out_p, out_st, losses, keep
+
+    def observe_vmap(params, frozen, state, batches, nb_live, weights,
+                     fault_codes=None):
+        """Single-dispatch defended round (vmap form): legacy einsum
+        aggregate untouched + keep verdict + stacked outputs."""
+        K = nb_live.shape[0]
+        bcast = lambda x: jnp.broadcast_to(x[None], (K,) + x.shape)
+        out_p, out_st, losses = jax.vmap(
+            local_train, in_axes=(0, None, 0, 0, 0))(
+            jax.tree.map(bcast, params), frozen, jax.tree.map(bcast, state),
+            batches, nb_live)
+        if fault_codes is not None:
+            out_p, losses = _apply_fault_codes(params, out_p, losses,
+                                               fault_codes, fault_amplify)
+        norms = _delta_norms(params, out_p)
+        keep = _verdict(norms, losses, weights)
+        w = (weights / jnp.sum(weights)).astype(jnp.float32)
+        agg = make_agg(w)
+        return (jax.tree.map(agg, out_p), jax.tree.map(agg, out_st), losses,
+                keep, out_p, out_st)
+
+    def robust_fn(params, frozen, state, batches, nb_live, weights,
+                  fault_codes=None):
+        """Robust in-graph combine (``trimmed_mean``/``coord_median``) —
+        no bit-identity contract, single dispatch, NaN-safe (masked rows
+        sort to +inf and the order statistics index the valid prefix)."""
+        out_p, out_st, losses, keep = train_stacked(
+            params, frozen, state, batches, nb_live, weights, fault_codes)
+        n_valid = jnp.sum(keep.astype(jnp.int32))
+        safe = n_valid > 0
+        rob = lambda x: _robust_leaf(x, keep, n_valid, aggregator, trim_beta)
+        # all rows screened out -> the round is a no-op (never average NaN)
+        agg_p = jax.tree.map(lambda x, p0: jnp.where(safe, rob(x), p0),
+                             out_p, params)
+        agg_st = jax.tree.map(lambda x, s0: jnp.where(safe, rob(x), s0),
+                              out_st, state)
+        return agg_p, agg_st, losses, keep
+
     def round_fn_compressed(params, frozen, state, batches, nb_live, weights,
                             residuals):
         K = nb_live.shape[0]
@@ -365,6 +638,38 @@ def make_fused_round(loss_fn: LossFn, optimizer: Optimizer, *,
         agg = psum_agg(w)
         return jax.tree.map(agg, out_p), jax.tree.map(agg, out_st), losses
 
+    def round_fn_sharded_defended(params, frozen, state, batches, nb_live,
+                                  weights, fault_codes=None):
+        """Defended twin of ``round_fn_sharded`` (mean aggregator only),
+        observe design like ``round_fn_defended``: the legacy per-shard
+        weight normalization + psum-joined Eq. 1 aggregate run untouched,
+        the screen's median statistic goes global with ONE ``all_gather``
+        of the per-shard delta norms plus a ``psum`` of the valid count,
+        and the per-shard ``keep`` verdicts + stacked client outputs come
+        back partitioned along the client axis for the caller's host-side
+        recombine when screening fires."""
+        out_p, out_st, losses, w = shard_train(params, frozen, state,
+                                               batches, nb_live, weights)
+        if fault_codes is not None:
+            out_p, losses = _apply_fault_codes(params, out_p, losses,
+                                               fault_codes, fault_amplify)
+        norms = _delta_norms(params, out_p)
+        if screen:
+            valid = (jnp.isfinite(norms) & jnp.isfinite(losses)
+                     & (weights > 0))
+            all_n = jax.lax.all_gather(jnp.where(valid, norms, jnp.inf),
+                                       CLIENT_AXIS, tiled=True)
+            n_v = jax.lax.psum(jnp.sum(valid.astype(jnp.int32)), CLIENT_AXIS)
+            med = _lower_median(jnp.sort(all_n), n_v)
+            outlier = jnp.isfinite(med) & (norms > screen_norm_mult * med
+                                           + 1e-6)
+            keep = valid & ~outlier
+        else:
+            keep = weights > 0
+        agg = psum_agg(w)
+        return (jax.tree.map(agg, out_p), jax.tree.map(agg, out_st), losses,
+                keep, out_p, out_st)
+
     def round_fn_compressed_sharded(params, frozen, state, batches, nb_live,
                                     weights, residuals):
         out_p, out_st, losses, w = shard_train(params, frozen, state,
@@ -401,6 +706,34 @@ def make_fused_round(loss_fn: LossFn, optimizer: Optimizer, *,
                            in_specs=(rep, rep, rep, csp, csp, csp, csp),
                            out_specs=(rep, rep, csp, csp))
             return jax.jit(fn, donate_argnums=(3, 6) if donate_ok else ())
+        if defended:
+            # shard_map needs a fixed positional signature, so the codes
+            # input only exists on injector-enabled builds
+            if inject_faults:
+                body = round_fn_sharded_defended
+                in_sp = (rep, rep, rep, csp, csp, csp, csp)
+            else:
+                def body(p, f, s, b, nb, w):
+                    return round_fn_sharded_defended(p, f, s, b, nb, w)
+                in_sp = (rep, rep, rep, csp, csp, csp)
+            out_sp = (rep, rep, csp, csp, csp, csp)
+            smfn = jax.jit(shard_map(body, mesh=mesh, in_specs=in_sp,
+                                     out_specs=out_sp),
+                           donate_argnums=(3,) if donate_ok else ())
+
+            def sharded_defended(params, frozen, state, batches, nb_live,
+                                 weights, fault_codes=None):
+                args = (params, frozen, state, batches, nb_live, weights)
+                if fault_codes is not None:
+                    args = args + (fault_codes,)
+                agg_p, agg_st, losses, keep, out_p, out_st = smfn(*args)
+                k = np.asarray(keep)
+                if np.any(~k & (np.asarray(weights) > 0)):
+                    agg_p, agg_st = _recombine_kept(params, state, out_p,
+                                                    out_st, k, weights)
+                return agg_p, agg_st, losses, keep
+
+            return sharded_defended
         fn = shard_map(round_fn_sharded, mesh=mesh,
                        in_specs=(rep, rep, rep, csp, csp, csp),
                        out_specs=(rep, rep, csp))
@@ -409,6 +742,51 @@ def make_fused_round(loss_fn: LossFn, optimizer: Optimizer, *,
         donate = (3, 6) if jax.default_backend() != "cpu" else ()
         return jax.jit(round_fn_compressed, donate_argnums=donate)
     donate = (3,) if jax.default_backend() != "cpu" else ()
+    if defended and aggregator != "mean":
+        return jax.jit(robust_fn, donate_argnums=donate)
+    if defended and not unroll:
+        observe_jit = jax.jit(observe_vmap, donate_argnums=donate)
+
+        def vmap_defended(params, frozen, state, batches, nb_live, weights,
+                          fault_codes=None):
+            agg_p, agg_st, losses, keep, out_p, out_st = observe_jit(
+                params, frozen, state, batches, nb_live, weights,
+                fault_codes)
+            k = np.asarray(keep)
+            if np.any(~k & (np.asarray(weights) > 0)):
+                agg_p, agg_st = _recombine_kept(params, state, out_p,
+                                                out_st, k, weights)
+            return agg_p, agg_st, losses, keep
+
+        return vmap_defended
+    if defended:
+        # unrolled two-dispatch form: the screen probe always runs, and the
+        # aggregate comes from the EXACT legacy jit whenever every live row
+        # passed clean. The batches buffer feeds BOTH jits, so it is never
+        # donated here.
+        legacy_jit = jax.jit(round_fn)
+        probe_jit = jax.jit(train_stacked)
+
+        def unrolled_defended(params, frozen, state, batches, nb_live,
+                              weights, fault_codes=None):
+            out_p, out_st, losses_p, keep = probe_jit(
+                params, frozen, state, batches, nb_live, weights,
+                fault_codes)
+            k = np.asarray(keep)
+            if fault_codes is None and not np.any(
+                    ~k & (np.asarray(weights) > 0)):
+                # every live row passed: take the untouched legacy graph's
+                # aggregate — bitwise the undefended round
+                agg_p, agg_st, losses = legacy_jit(params, frozen, state,
+                                                   batches, nb_live, weights)
+                return agg_p, agg_st, losses, keep
+            # a corrupted or screened round voids the bit-identity
+            # contract: combine the kept rows host-side (NaN-safe)
+            agg_p, agg_st = _recombine_kept(params, state, out_p, out_st,
+                                            k, weights)
+            return agg_p, agg_st, losses_p, keep
+
+        return unrolled_defended
     return jax.jit(round_fn, donate_argnums=donate)
 
 
@@ -459,6 +837,19 @@ class RoundEngine:
     trajectories. The sequential escape hatch ignores the mesh (it exists
     for the deadline/straggler path, which is latency- not
     throughput-bound).
+
+    ISSUE 7 defenses: ``screen=True`` turns on the in-graph update screen
+    (finite-check + ``screen_norm_mult`` x median delta-norm outlier mask,
+    as zero-weight masking before Eq. 1; per-client verdicts land in
+    ``last_screened``), ``aggregator`` selects
+    ``"trimmed_mean"``/``"coord_median"`` robust combines, and
+    ``run_round(..., faults={cid: kind})`` injects the corruption kinds of
+    ``fl/faults.py`` — in-graph ``fault_codes`` on the fused dispatch,
+    host-side ``apply_fault_to_update`` on the sequential path, same
+    delta-space semantics. With screening on and no faults, rounds are
+    bit-identical to an undefended engine (the legacy code paths are used
+    verbatim whenever no defense is active). None of this composes with
+    ``compress_ratio`` (error feedback would carry corrupted signal).
     """
     loss_fn: LossFn
     optimizer: Optimizer
@@ -472,7 +863,13 @@ class RoundEngine:
     compress_ratio: Optional[float] = None
     compute_dtype: Optional[str] = None
     mesh: Any = None
+    screen: bool = False
+    screen_norm_mult: float = 8.0
+    aggregator: str = "mean"
+    trim_beta: float = 0.2
+    fault_amplify: float = 50.0
     last_uplink_bytes: int = 0
+    last_screened: Dict[int, bool] = field(default_factory=dict, repr=False)
     _features: Dict[int, EncodedFeatures] = field(default_factory=dict,
                                                   repr=False)
     _cache_version: int = field(default=0, repr=False)
@@ -643,7 +1040,8 @@ class RoundEngine:
     def run_round(self, clients: Dict[int, SimClient], selected: List[int],
                   params, state, round_idx: int, *,
                   use_cache: Optional[Dict[int, bool]] = None,
-                  sequential: Optional[bool] = None
+                  sequential: Optional[bool] = None,
+                  faults: Optional[Dict[int, str]] = None
                   ) -> Tuple[Any, Any, Dict[int, float]]:
         """One federated round over ``selected``. Returns (params, state,
         per-client mean loss). Splits the cohort into per-cache-tier groups
@@ -651,10 +1049,24 @@ class RoundEngine:
         as one fused dispatch, and combines the group aggregates by total
         weight — algebraically the same Eq. 1 average as a single flat
         cohort. ``use_cache`` values are tier names (legacy booleans still
-        accepted: ``True`` == the exact f32 tier)."""
+        accepted: ``True`` == the exact f32 tier). ``faults`` maps client
+        ids in the cohort to ``fl/faults.CORRUPT_KINDS`` — their trained
+        updates are corrupted (delta-space) before screening/aggregation;
+        crash/hang kinds never reach the engine (the aggregation policies
+        drop those clients upstream)."""
         use_cache = use_cache or {}
         seq = (not self.fused) if sequential is None else sequential
+        if self.aggregator not in AGGREGATORS:
+            raise ValueError(f"unknown aggregator {self.aggregator!r}; "
+                             f"choose from {AGGREGATORS}")
+        faults = {int(c): k for c, k in (faults or {}).items()
+                  if k in CORRUPT_KINDS} or None
+        if ((self.screen or self.aggregator != "mean" or faults)
+                and self.compress_ratio is not None):
+            raise ValueError("screening / robust aggregation / fault "
+                             "injection do not compose with compress_ratio")
         self.last_uplink_bytes = 0
+        self.last_screened = {}
         groups: Dict[Optional[str], List[int]] = {}
         for cid in selected:
             tier = (normalize_tier(use_cache.get(cid))
@@ -666,7 +1078,7 @@ class RoundEngine:
         for tier, cids in groups.items():
             runner = self._run_sequential if seq else self._run_fused
             p_g, s_g, l_g, w_g = runner(clients, cids, params, state,
-                                        round_idx, tier=tier)
+                                        round_idx, tier=tier, faults=faults)
             partials.append((p_g, s_g, w_g))
             losses.update(l_g)
         if len(partials) == 1:
@@ -693,7 +1105,11 @@ class RoundEngine:
             return self.loss_fn
         return make_tiered_loss(self.cached_loss_fn, tier, self.compute_dtype)
 
-    def _run_fused(self, clients, cids, params, state, round_idx, *, tier):
+    def _run_fused(self, clients, cids, params, state, round_idx, *, tier,
+                   faults=None):
+        codes = corrupt_codes(faults, cids)
+        defended = (self.screen or self.aggregator != "mean"
+                    or codes is not None)
         bs, ep = self.batch_size, self.local_epochs
         plans = {cid: batch_index_plan(clients[cid].num_samples, bs, ep,
                                        clients[cid].round_seed(round_idx))
@@ -728,18 +1144,36 @@ class RoundEngine:
         w_in = (np.concatenate([weights, np.zeros(pad, np.float32)])
                 if pad else weights)
         key = "fused" if tier is None else f"fused_cached_{tier}"
+        if defended:
+            # an undefended engine round keeps the LEGACY compiled fn (and
+            # its bit-exact trajectory); the defended build is keyed by its
+            # defense config so faulted and clean rounds don't retrace each
+            # other's variant
+            key += (f"|scr{int(self.screen)}|agg:{self.aggregator}"
+                    f"|flt{int(codes is not None)}")
         fn = self._jit_cache.get(key)
         if fn is None:
             fn = make_fused_round(self._group_loss_fn(tier),
                                   self.optimizer, clip_norm=self.clip_norm,
                                   compress_ratio=self.compress_ratio,
                                   compute_dtype=self.compute_dtype,
-                                  mesh=self.mesh)
+                                  mesh=self.mesh,
+                                  screen=self.screen if defended else False,
+                                  screen_norm_mult=self.screen_norm_mult,
+                                  aggregator=(self.aggregator if defended
+                                              else "mean"),
+                                  trim_beta=self.trim_beta,
+                                  inject_faults=codes is not None,
+                                  fault_amplify=self.fault_amplify)
             self._jit_cache[key] = fn
         cached = tier is not None
         frozen = {} if cached else (self.frozen if self.frozen is not None else {})
         batches = {k: jnp.asarray(v) for k, v in stacked.items()}
         nb_dev, w_dev = jnp.asarray(nb_live), jnp.asarray(w_in)
+        codes_dev = None
+        if codes is not None:
+            codes_dev = jnp.asarray(np.concatenate(
+                [codes, np.zeros(pad, np.int32)]) if pad else codes)
         if n_shards > 1:
             # explicit placement: cohort-stacked rows partition along the
             # client axis, model trees replicate — no implicit resharding
@@ -748,6 +1182,8 @@ class RoundEngine:
                                               (params, frozen, state))
             batches, nb_dev, w_dev = shard_cohort(self.mesh,
                                                   (batches, nb_dev, w_dev))
+            if codes_dev is not None:
+                codes_dev = shard_cohort(self.mesh, codes_dev)
         args = (params, frozen, state, batches, nb_dev, w_dev)
         if self.compress_ratio is not None:
             residuals, rows = self._gather_residuals(cids, params)
@@ -770,7 +1206,20 @@ class RoundEngine:
                                      new_r)
             self._scatter_residuals(rows, new_r)
         else:
-            p_g, s_g, l_g = fn(*args)
+            out = fn(*args, codes_dev) if codes_dev is not None else fn(*args)
+            if defended:
+                # every defended build returns a uniform 4-tuple; the mean
+                # builds are host wrappers that already recombined the kept
+                # rows whenever screening fired
+                p_g, s_g, l_g, keep = out
+                if self.screen:
+                    k_host = np.asarray(keep)[:len(cids)]
+                    # True == this client's update was screened OUT
+                    self.last_screened.update(
+                        {cid: not bool(k_host[i])
+                         for i, cid in enumerate(cids)})
+            else:
+                p_g, s_g, l_g = out
         self.last_uplink_bytes += self._uplink_bytes(params, len(cids))
         # ONE blocking sync for the whole cohort (padded rows sliced off)
         l_host = np.asarray(l_g)[:len(cids)]
@@ -833,10 +1282,51 @@ class RoundEngine:
             fn = self._jit_cache["seq_compress"] = jax.jit(comp)
         return fn
 
-    def _run_sequential(self, clients, cids, params, state, round_idx, *, tier):
+    def _robust_combine(self):
+        """Jitted robust aggregate over ALREADY-KEPT sequential updates —
+        the same ``_robust_leaf`` order statistics the fused dispatch uses
+        (host screening removed the masked rows, so keep is all-true)."""
+        fn = self._jit_cache.get("robust_combine")
+        if fn is None:
+            agg_name, beta = self.aggregator, self.trim_beta
+
+            def comb(p_trees, s_trees):
+                n = len(p_trees)
+                keep = jnp.ones(n, bool)
+                nv = jnp.int32(n)
+                rob = lambda x: _robust_leaf(x, keep, nv, agg_name, beta)
+                sp = jax.tree.map(lambda *xs: jnp.stack(xs), *p_trees)
+                ss = jax.tree.map(lambda *xs: jnp.stack(xs), *s_trees)
+                return jax.tree.map(rob, sp), jax.tree.map(rob, ss)
+
+            fn = self._jit_cache["robust_combine"] = jax.jit(comb)
+        return fn
+
+    def _host_keep(self, norms, l_arr, w_arr):
+        """Numpy mirror of the in-graph ``_keep_mask`` (same lower-median /
+        mult semantics), so sequential and fused rounds screen the same
+        clients."""
+        finite = np.isfinite(norms) & np.isfinite(l_arr)
+        valid = finite & (w_arr > 0)
+        if not self.screen:
+            # robust aggregators always exclude non-finite rows (they
+            # would poison the order statistics); the plain mean without
+            # screening lets corruption through — the divergence arm
+            return valid if self.aggregator != "mean" else (w_arr > 0)
+        n_v = int(valid.sum())
+        med = np.sort(np.where(valid, norms, np.inf))[max(n_v - 1, 0) // 2]
+        outlier = bool(np.isfinite(med)) & (
+            norms > self.screen_norm_mult * med + 1e-6)
+        return valid & ~outlier
+
+    def _run_sequential(self, clients, cids, params, state, round_idx, *,
+                        tier, faults=None):
         step = self._seq_step(tier)
         frozen = ({} if tier is not None
                   else (self.frozen if self.frozen is not None else {}))
+        faults = faults or {}
+        defended = (self.screen or self.aggregator != "mean"
+                    or any(cid in faults for cid in cids))
         updates, weights, losses = [], [], {}
         for cid in cids:
             c = clients[cid]
@@ -856,12 +1346,48 @@ class RoundEngine:
                     params, p_i, [p[rows[0]] for p in self._res_pool])
                 self._res_pool = [p.at[rows[0]].set(r) for p, r in
                                   zip(self._res_pool, new_r)]
+            loss_i = float(np.mean(batch_losses)) if batch_losses else 0.0
+            kind = faults.get(cid)
+            if kind is not None:
+                # host-side twin of the in-graph fault_codes transform
+                p_i = apply_fault_to_update(kind, params, p_i,
+                                            amplify=self.fault_amplify)
+                if kind in ("nan", "inf"):
+                    loss_i = float("nan")
             updates.append((p_i, s_i))
             weights.append(c.num_samples)
-            losses[cid] = float(np.mean(batch_losses)) if batch_losses else 0.0
+            losses[cid] = loss_i
         self.last_uplink_bytes += self._uplink_bytes(params, len(cids))
-        w = np.asarray(weights, np.float64)
-        w /= w.sum()
+        w_arr = np.asarray(weights, np.float64)
+        if defended:
+            norm_fn = self._jit_cache.setdefault(
+                "delta_norm", jax.jit(_delta_norm_one))
+            norms = np.asarray([float(norm_fn(params, u[0]))
+                                for u in updates])
+            l_arr = np.asarray([losses[cid] for cid in cids])
+            keep = self._host_keep(norms, l_arr, w_arr)
+            if self.screen:
+                self.last_screened.update(
+                    {cid: not bool(keep[i]) for i, cid in enumerate(cids)})
+            if not keep.any():
+                # every update screened out: the group is a no-op (the
+                # fused path's in-graph `safe` fallback), weight unchanged
+                return params, state, losses, float(w_arr.sum())
+            if self.aggregator != "mean":
+                kept = [u for u, k in zip(updates, keep) if k]
+                p_g, s_g = self._robust_combine()([u[0] for u in kept],
+                                                  [u[1] for u in kept])
+                return p_g, s_g, losses, float(w_arr.sum())
+            if not keep.all():
+                kept_w = w_arr[keep]
+                kept = [u for u, k in zip(updates, keep) if k]
+                w = kept_w / kept_w.sum()
+                return (weighted_avg([u[0] for u in kept], w),
+                        weighted_avg([u[1] for u in kept], w), losses,
+                        float(w_arr.sum()))
+            # all kept + mean -> fall through to the EXACT legacy combine
+            # (zero-fault bit-identity on the sequential path too)
+        w = w_arr / w_arr.sum()
         return (weighted_avg([u[0] for u in updates], w),
                 weighted_avg([u[1] for u in updates], w), losses,
                 float(np.sum(weights)))

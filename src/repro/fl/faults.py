@@ -1,0 +1,170 @@
+"""Deterministic fault injection for federated rounds (ISSUE 7 tentpole #1).
+
+Real heterogeneous fleets fail constantly — flaky edge devices corrupt
+updates mid-computation, crash between local training and upload, or hang
+with an update half-uploaded (ProFL arXiv:2404.13349, NeuLite
+arXiv:2408.10826 both motivate progressive training for exactly these
+devices). The simulator (fl/sim.py) already models *absence* (availability
+and mid-round dropout) but had no way to inject *corrupted computation*.
+
+``FaultInjector`` draws one deterministic fault decision per
+(seed, round, client) via the same splitmix64-style integer hash discipline
+as ``AvailabilityTrace``: draws are independent of cohort iteration order
+and of which other clients are queried, so fault schedules are
+permutation-invariant and replay bit-identically across checkpoint/resume.
+
+Fault kinds:
+
+  ``"nan"`` / ``"inf"``   the client's update delta is fully non-finite
+                          (emulates NaN/Inf gradients poisoning local
+                          training); the reported loss goes NaN too
+  ``"signflip"``          delta negated — a directed (norm-preserving)
+                          corruption that finite/norm screening cannot see;
+                          the robust aggregators (engine.py
+                          ``aggregator="trimmed_mean"|"coord_median"``) are
+                          the defense
+  ``"amplify"``           delta scaled by ``amplify`` (default 50x) —
+                          caught by the median delta-norm outlier mask
+  ``"crash"``             mid-round crash: compute time is spent, the
+                          update never reaches the server (handled by the
+                          aggregation policies, not the engine)
+  ``"hang"``              an in-flight async client never completes;
+                          recoverable only via
+                          ``AsyncBufferedAggregation(timeout_s=...)``
+
+The first four ("corruption" kinds) flow through the round engine — either
+as an in-graph ``fault_codes`` vector on the fused dispatch or applied
+host-side on the sequential path — so corrupted updates hit the in-graph
+screening mask exactly like a real byzantine update would.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["FaultInjector", "FAULT_KINDS", "CORRUPT_KINDS", "FAULT_CODE",
+           "hash_draws", "apply_fault_to_update"]
+
+#: every kind the injector can draw
+FAULT_KINDS: Tuple[str, ...] = ("nan", "inf", "signflip", "amplify",
+                                "crash", "hang")
+#: kinds that corrupt the *content* of an update (engine-visible)
+CORRUPT_KINDS: Tuple[str, ...] = ("nan", "inf", "signflip", "amplify")
+#: in-graph integer codes for the corruption kinds (0 = no fault)
+FAULT_CODE: Dict[str, int] = {"nan": 1, "inf": 2, "signflip": 3,
+                              "amplify": 4}
+
+
+def hash_draws(seed: int, round_idx: int, ids: Sequence[int]) -> np.ndarray:
+    """One deterministic uniform per (seed, round, client), vectorized via a
+    splitmix64-style integer hash — independent of cohort order and of
+    which other clients are queried (so schedules stay
+    permutation-invariant and traces replay across resume), and O(N) array
+    work rather than per-client RandomState construction. Canonical copy of
+    the availability-trace hash (fl/sim.py aliases it)."""
+    c1 = np.uint64(0x9E3779B97F4A7C15)
+    c2 = np.uint64(0xBF58476D1CE4E5B9)
+    c3 = np.uint64(0x94D049BB133111EB)
+    with np.errstate(over="ignore"):   # uint64 wraparound is the hash
+        x = (np.asarray(ids, np.uint64) * c1
+             + np.uint64(round_idx % (1 << 63)) * c2
+             + np.uint64(seed % (1 << 63)) * c3)
+        x ^= x >> np.uint64(30)
+        x *= c2
+        x ^= x >> np.uint64(27)
+        x *= c3
+        x ^= x >> np.uint64(31)
+    return (x >> np.uint64(11)).astype(np.float64) / float(1 << 53)
+
+
+@dataclass
+class FaultInjector:
+    """Seeded per-(client, round) fault schedule.
+
+    ``p_fault`` gates whether a client faults this round; a second,
+    independent draw picks the kind uniformly from ``kinds``. Draws are
+    keyed per (seed, round, client) only — querying a cohort subset, a
+    permutation, or one client at a time yields the same per-client
+    verdicts (property-tested).
+
+    ``start_round`` delays injection (faults only fire at
+    ``round_idx >= start_round``) — useful for poisoning specifically the
+    post-freeze window in rollback tests and benchmarks.
+    """
+
+    p_fault: float = 0.0
+    kinds: Tuple[str, ...] = ("nan", "amplify", "crash")
+    amplify: float = 50.0
+    seed: int = 0
+    start_round: int = 0
+
+    def __post_init__(self):
+        self.kinds = tuple(self.kinds)
+        unknown = [k for k in self.kinds if k not in FAULT_KINDS]
+        if unknown:
+            raise ValueError(f"unknown fault kinds {unknown}; "
+                             f"choose from {FAULT_KINDS}")
+
+    def fault_for(self, cid: int, round_idx: int) -> Optional[str]:
+        """This client's fault kind this round (None = healthy)."""
+        return self.schedule([cid], round_idx).get(int(cid))
+
+    def schedule(self, ids: Sequence[int], round_idx: int) -> Dict[int, str]:
+        """{client_id: kind} for the faulty subset of ``ids`` this round."""
+        ids = list(ids)
+        if (self.p_fault <= 0.0 or not ids
+                or round_idx < self.start_round or not self.kinds):
+            return {}
+        gate = hash_draws(self.seed + 0x5AFE, round_idx, ids)
+        pick = hash_draws(self.seed + 0xFA11, round_idx, ids)
+        out: Dict[int, str] = {}
+        for cid, g, u in zip(ids, gate, pick):
+            if g < self.p_fault:
+                out[int(cid)] = self.kinds[
+                    min(int(u * len(self.kinds)), len(self.kinds) - 1)]
+        return out
+
+    def corrupt_codes(self, faults: Optional[Dict[int, str]],
+                      cids: Sequence[int]) -> Optional[np.ndarray]:
+        """[K] int32 in-graph code vector for a cohort (None when the
+        cohort is clean) — the fused dispatch's ``fault_codes`` input."""
+        return corrupt_codes(faults, cids)
+
+
+def corrupt_codes(faults: Optional[Dict[int, str]],
+                  cids: Sequence[int]) -> Optional[np.ndarray]:
+    """{cid: kind} -> [K] int32 codes aligned with ``cids`` (0 = clean);
+    None when no client in the cohort carries a corruption kind."""
+    if not faults:
+        return None
+    codes = np.asarray([FAULT_CODE.get(faults.get(int(c), ""), 0)
+                        for c in cids], np.int32)
+    return codes if codes.any() else None
+
+
+def apply_fault_to_update(kind: str, params, p_i, *, amplify: float = 50.0):
+    """Host-side corruption of one client's trained params (sequential
+    path): same delta-space semantics as the in-graph ``fault_codes``
+    transform in ``fl/engine.py`` — delta = p_i - params is NaN'd / Inf'd /
+    negated / scaled, then re-added to the round's start params."""
+    if kind not in CORRUPT_KINDS:
+        raise ValueError(f"not a corruption kind: {kind!r}")
+
+    def leaf(p0, pk):
+        p0f = p0.astype(jnp.float32)
+        d = pk.astype(jnp.float32) - p0f
+        if kind == "nan":
+            d = jnp.full_like(d, jnp.nan)
+        elif kind == "inf":
+            d = jnp.full_like(d, jnp.inf)
+        elif kind == "signflip":
+            d = -d
+        else:  # amplify
+            d = d * jnp.float32(amplify)
+        return (p0f + d).astype(pk.dtype)
+
+    return jax.tree.map(leaf, params, p_i)

@@ -33,6 +33,7 @@ implement ``fit_communities`` + ``select`` with the same contract.
 from __future__ import annotations
 
 import dataclasses
+import logging
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Union
 
@@ -51,7 +52,8 @@ from repro.core.selector import ParticipantSelector
 from repro.core.selector.selection import InfeasibleStageError
 from repro.core.selector.similarity import similarity_matrix
 from repro.fl.client import SimClient
-from repro.fl.engine import RoundEngine, weighted_avg
+from repro.fl.engine import AGGREGATORS, RoundEngine, weighted_avg
+from repro.fl.faults import FaultInjector
 from repro.fl.sim import (AvailabilityTrace, DeadlineAggregation,
                           FederatedLoop, FleetTimeModel, SyncAggregation,
                           load_selector_state, pack_float_map,
@@ -79,10 +81,26 @@ class RoundResult:
     virtual_time: Optional[float] = None  # virtual clock at round end
     dropped: List[int] = field(default_factory=list)  # deadline/dropout
     cache_bytes: Optional[int] = None    # resident feature cache (stored dtype)
+    screened: List[int] = field(default_factory=list)  # updates screened out
+    rolled_back: bool = False            # this round triggered a freeze rollback
 
 
-def _mean_loss(losses: Dict[int, float]) -> float:
-    return float(np.mean(list(losses.values()))) if losses else float("nan")
+_log = logging.getLogger(__name__)
+
+
+def _mean_loss(losses: Dict[int, float],
+               prev: Optional[float] = None) -> float:
+    """Mean of the FINITE per-client losses this round. A starved round —
+    empty cohort, or every reported loss non-finite (all clients
+    crashed/faulted) — returns ``prev`` when available so the history (and
+    anything smoothing over it) never ingests a NaN, and logs the
+    starvation explicitly instead of letting it travel silently."""
+    vals = [v for v in losses.values() if np.isfinite(v)]
+    if vals:
+        return float(np.mean(vals))
+    _log.warning("starved round: %d client losses reported, none finite; "
+                 "carrying previous loss %s", len(losses), prev)
+    return float(prev) if prev is not None else float("nan")
 
 
 class SmartFreezeServer:
@@ -101,7 +119,12 @@ class SmartFreezeServer:
                  aggregation: Union[str, object, None] = None,
                  time_model: Optional[FleetTimeModel] = None,
                  availability: Optional[AvailabilityTrace] = None,
-                 mesh=None):
+                 mesh=None, screen_updates: bool = False,
+                 aggregator: str = "mean",
+                 faults: Optional[FaultInjector] = None,
+                 freeze_rollback: bool = False,
+                 rollback_guard: float = 0.5, rollback_window: int = 8,
+                 rollback_patience: int = 2, max_rollbacks: int = 1):
         self.model = model
         self.clients = {c.client_id: c for c in clients}
         self.optimizer_fn = optimizer_fn
@@ -135,6 +158,21 @@ class SmartFreezeServer:
         # the bit-identical single-device path. Selection stays host-side,
         # so sharded and single-device runs pick identical cohorts.
         self.mesh = mesh
+        # ISSUE 7 defenses: in-graph update screening / robust aggregation
+        # (threaded into every stage engine), deterministic fault injection
+        # (handed to the FederatedLoop), and post-freeze divergence rollback
+        if aggregator not in AGGREGATORS:
+            raise ValueError(f"unknown aggregator {aggregator!r}; "
+                             f"choose from {AGGREGATORS}")
+        self.screen_updates = screen_updates
+        self.aggregator = aggregator
+        self.faults = faults
+        self.freeze_rollback = freeze_rollback
+        self.rollback_guard = rollback_guard
+        self.rollback_window = rollback_window
+        self.rollback_patience = rollback_patience
+        self.max_rollbacks = max_rollbacks
+        self.rollbacks = 0                   # freeze rollbacks taken so far
         self.history: List[RoundResult] = []
         self.cache_tier_plan: Dict[int, Optional[str]] = {}  # current stage
         self._last_loss: Dict[int, float] = {}
@@ -185,7 +223,8 @@ class SmartFreezeServer:
             batch_size=self.batch_size, local_epochs=self.local_epochs,
             clip_norm=10.0, fused=self.fused,
             compress_ratio=self.compress_ratio,
-            compute_dtype=self.compute_dtype, mesh=self.mesh)
+            compute_dtype=self.compute_dtype, mesh=self.mesh,
+            screen=self.screen_updates, aggregator=self.aggregator)
 
     def _cache_plan(self, stage: int) -> Dict[int, Optional[str]]:
         """Memory-model admission ladder (Eq. 12 per tier): walk
@@ -245,7 +284,16 @@ class SmartFreezeServer:
             round_idx = int(meta["round_idx"]) + 1
             start_stage = int(meta["stage"])
 
-        for stage in range(start_stage, n_stages):
+        # rollback bookkeeping (ISSUE 7): armed right after a pace freeze
+        # with a pre-freeze snapshot + loss reference; the next stage's
+        # rounds are watched for a regression past the guard band. The
+        # armed state is not serialized — a resumed run re-arms at its next
+        # freeze (documented; rollback is a safety net, not part of the
+        # bit-identical trajectory contract).
+        rb_armed: Optional[Dict] = None
+        recent_losses: List[float] = []
+        stage = start_stage
+        while stage < n_stages:
             mid = restored["metadata"] if (restored is not None
                                            and stage == start_stage) else None
             if schedule is not None:
@@ -279,6 +327,7 @@ class SmartFreezeServer:
                                              self.image_size)
             stage_done = mid is not None and (
                 bool(mid.get("frozen")) or r_in_stage >= plan_rounds)
+            flags = {"freeze": False, "rollback": False}
 
             if not stage_done:
                 stage_base = params
@@ -305,11 +354,13 @@ class SmartFreezeServer:
                             return []
                         raise
 
-                def train_fn(cohort, r, sequential=None):
+                def train_fn(cohort, r, sequential=None, faults=None):
                     box["active"], box["state"], losses = engine.run_round(
                         self.clients, cohort, box["active"], box["state"], r,
-                        use_cache=cache_ok, sequential=sequential)
-                    self._last_loss.update(losses)
+                        use_cache=cache_ok, sequential=sequential,
+                        faults=faults)
+                    self._last_loss.update(
+                        {c: v for c, v in losses.items() if np.isfinite(v)})
                     return losses
 
                 def train_one_fn(cid, p, s, r):
@@ -324,15 +375,37 @@ class SmartFreezeServer:
 
                 def on_round(rec):
                     p = pace.observe(box["active"].get("stages", box["active"]))
+                    prev = self.history[-1].loss if self.history else None
+                    loss = _mean_loss(rec.losses, prev=prev)
                     do_freeze = pace.should_freeze() and schedule is None
-                    rr = RoundResult(rec.round_idx, stage, _mean_loss(rec.losses),
+                    # post-freeze divergence watch (armed by the previous
+                    # stage's pace freeze): a sustained loss regression
+                    # past the guard band rolls that freeze back
+                    rolled = False
+                    if rb_armed is not None and np.isfinite(loss):
+                        if loss > rb_armed["ref"] + self.rollback_guard:
+                            rb_armed["bad"] += 1
+                        else:
+                            rb_armed["bad"] = 0
+                        if rb_armed["bad"] >= self.rollback_patience:
+                            rolled = flags["rollback"] = True
+                            do_freeze = False
+                    flags["freeze"] = do_freeze
+                    rr = RoundResult(rec.round_idx, stage, loss,
                                      selected=rec.selected, perturbation=p,
                                      frozen=do_freeze,
                                      uplink_bytes=engine.last_uplink_bytes,
                                      duration=rec.duration,
                                      virtual_time=rec.t_end,
                                      dropped=rec.dropped,
-                                     cache_bytes=engine.cache_nbytes())
+                                     cache_bytes=engine.cache_nbytes(),
+                                     screened=sorted(
+                                         c for c, s in
+                                         engine.last_screened.items() if s),
+                                     rolled_back=rolled)
+                    if np.isfinite(loss):
+                        recent_losses.append(loss)
+                        del recent_losses[:-self.rollback_window]
                     if eval_fn is not None and (rec.round_idx % eval_every == 0
                                                 or do_freeze):
                         merged = fz.merge_cnn_params(model, stage_base, stage,
@@ -345,7 +418,7 @@ class SmartFreezeServer:
                                         box, pace, engine, plan_rounds,
                                         rec.round_idx - round_idx + r_in_stage,
                                         do_freeze)
-                    return do_freeze
+                    return do_freeze or rolled
 
                 # copy before stamping the stage payload: a caller-supplied
                 # time model may be shared across runs/trainers
@@ -367,7 +440,8 @@ class SmartFreezeServer:
                     clients=self.clients,
                     client_ids=list(self.clients),
                     aggregation=policy, time_model=tm, mesh=self.mesh,
-                    availability=self.availability, on_round=on_round,
+                    availability=self.availability, faults=self.faults,
+                    on_round=on_round,
                     snapshot_fn=lambda: (box["active"], box["state"]),
                     train_one_fn=train_one_fn,
                     get_model_fn=lambda: (box["active"], box["state"]),
@@ -378,10 +452,39 @@ class SmartFreezeServer:
                 round_idx += len(done)
                 clock = loop.clock
                 active, state = box["active"], box["state"]
+                if flags["rollback"]:
+                    # divergence past the guard band: unfreeze the rolled
+                    # stage and restore its freeze-time snapshot, discarding
+                    # every post-freeze round trained on the poisoned model
+                    self.rollbacks += 1
+                    _log.warning(
+                        "freeze rollback: stage %d diverged post-freeze "
+                        "(ref %.4f, guard %.2f) — unfreezing stage %d and "
+                        "restoring its snapshot", stage, rb_armed["ref"],
+                        self.rollback_guard, rb_armed["stage"])
+                    params = rb_armed["params"]
+                    state = rb_armed["state"]
+                    stage = rb_armed["stage"]
+                    rb_armed = None
+                    recent_losses.clear()
+                    if mid is not None:
+                        restored = None
+                    continue
             # --- model growth ---
             params = fz.merge_cnn_params(model, params, stage, active)
+            rb_armed = None  # the watched stage survived its probation
+            if (self.freeze_rollback and flags["freeze"]
+                    and self.rollbacks < self.max_rollbacks
+                    and stage + 1 < n_stages):
+                # snapshot the just-frozen model + the pre-freeze loss
+                # reference; the next stage's rounds run under watch
+                ref = (float(np.mean(recent_losses)) if recent_losses
+                       else float("inf"))
+                rb_armed = {"stage": stage, "params": params, "state": state,
+                            "ref": ref, "bad": 0}
             if mid is not None:
                 restored = None  # consumed; later stages start fresh
+            stage += 1
         return {"params": params, "state": state, "history": self.history,
                 "rounds": round_idx, "virtual_time": clock}
 
@@ -423,7 +526,9 @@ class FedAvgServer:
                  aggregation: Union[str, object, None] = None,
                  time_model: Optional[FleetTimeModel] = None,
                  availability: Optional[AvailabilityTrace] = None,
-                 mesh=None):
+                 mesh=None, screen_updates: bool = False,
+                 aggregator: str = "mean",
+                 faults: Optional[FaultInjector] = None):
         self.model = model
         self.clients = {c.client_id: c for c in clients}
         self.optimizer_fn = optimizer_fn
@@ -439,6 +544,12 @@ class FedAvgServer:
         self.time_model = time_model
         self.availability = availability
         self.mesh = mesh
+        if aggregator not in AGGREGATORS:
+            raise ValueError(f"unknown aggregator {aggregator!r}; "
+                             f"choose from {AGGREGATORS}")
+        self.screen_updates = screen_updates
+        self.aggregator = aggregator
+        self.faults = faults
         self.history: List[RoundResult] = []
 
     def run(self, params, state, *, rounds: int, eval_fn=None, eval_every=10,
@@ -455,7 +566,8 @@ class FedAvgServer:
                              clip_norm=10.0, fused=self.fused,
                              compress_ratio=self.compress_ratio,
                              compute_dtype=self.compute_dtype,
-                             mesh=self.mesh)
+                             mesh=self.mesh, screen=self.screen_updates,
+                             aggregator=self.aggregator)
         rng = np.random.RandomState(self.seed)
         eligible = [cid for cid, c in self.clients.items()
                     if c.memory_bytes >= self.mem_required]
@@ -489,10 +601,10 @@ class FedAvgServer:
             return list(rng.choice(cands, size=min(self.k, len(cands)),
                                    replace=False))
 
-        def train_fn(cohort, r, sequential=None):
+        def train_fn(cohort, r, sequential=None, faults=None):
             box["params"], box["state"], losses = engine.run_round(
                 self.clients, cohort, box["params"], box["state"], r,
-                sequential=sequential)
+                sequential=sequential, faults=faults)
             return losses
 
         def train_one_fn(cid, p, s, r):
@@ -501,11 +613,16 @@ class FedAvgServer:
             return p_i, s_i, losses[cid]
 
         def on_round(rec):
+            prev = self.history[-1].loss if self.history else None
             rr = RoundResult(rec.round_idx, n_stages - 1,
-                             _mean_loss(rec.losses), selected=rec.selected,
+                             _mean_loss(rec.losses, prev=prev),
+                             selected=rec.selected,
                              uplink_bytes=engine.last_uplink_bytes,
                              duration=rec.duration, virtual_time=rec.t_end,
-                             dropped=rec.dropped)
+                             dropped=rec.dropped,
+                             screened=sorted(
+                                 c for c, s in engine.last_screened.items()
+                                 if s))
             if eval_fn is not None and rec.round_idx % eval_every == 0:
                 rr.test_acc = eval_fn(box["params"], box["state"], n_stages - 1)
             self.history.append(rr)
@@ -529,7 +646,8 @@ class FedAvgServer:
             client_ids=list(self.clients),
             aggregation=self.aggregation or "sync", time_model=tm,
             mesh=self.mesh,
-            availability=self.availability, on_round=on_round,
+            availability=self.availability, faults=self.faults,
+            on_round=on_round,
             snapshot_fn=lambda: (box["params"], box["state"]),
             train_one_fn=train_one_fn,
             get_model_fn=lambda: (box["params"], box["state"]),

@@ -57,6 +57,8 @@ import numpy as np
 from repro.core.time_model import (cohort_round_time, completion_jitter,
                                    completion_times_vec, stage_times_vec,
                                    uplink_times_vec)
+from repro.fl.faults import (CORRUPT_KINDS, FaultInjector,
+                             apply_fault_to_update, hash_draws)
 
 
 # ---------------------------------------------------------------------------
@@ -185,25 +187,10 @@ class FleetTimeModel:
 # ---------------------------------------------------------------------------
 
 
-def _draws(seed: int, round_idx: int, ids: Sequence[int]) -> np.ndarray:
-    """One deterministic uniform per (seed, round, client), vectorized via a
-    splitmix64-style integer hash — independent of cohort order and of
-    which other clients are queried (so sync results stay
-    permutation-invariant and traces replay across resume), and O(N) array
-    work rather than per-client RandomState construction."""
-    c1 = np.uint64(0x9E3779B97F4A7C15)
-    c2 = np.uint64(0xBF58476D1CE4E5B9)
-    c3 = np.uint64(0x94D049BB133111EB)
-    with np.errstate(over="ignore"):   # uint64 wraparound is the hash
-        x = (np.asarray(ids, np.uint64) * c1
-             + np.uint64(round_idx % (1 << 63)) * c2
-             + np.uint64(seed % (1 << 63)) * c3)
-        x ^= x >> np.uint64(30)
-        x *= c2
-        x ^= x >> np.uint64(27)
-        x *= c3
-        x ^= x >> np.uint64(31)
-    return (x >> np.uint64(11)).astype(np.float64) / float(1 << 53)
+# One deterministic uniform per (seed, round, client). The canonical
+# splitmix64 implementation moved to fl/faults.py (ISSUE 7) so the fault
+# injector shares the exact draw discipline; same values as before.
+_draws = hash_draws
 
 
 @dataclass
@@ -253,6 +240,8 @@ class RoundRecord:
     policy: str = "sync"
     sequential: bool = False
     staleness: Dict[int, int] = field(default_factory=dict)  # async only
+    faults: Dict[int, str] = field(default_factory=dict)     # injected kinds
+    retries: Dict[int, int] = field(default_factory=dict)    # async re-dispatch
 
 
 # ---------------------------------------------------------------------------
@@ -265,7 +254,10 @@ class SyncAggregation:
     the slowest *surviving* client. Dropped clients' updates never arrive
     and the simulator charges no extra wait for discovering they are gone
     (an optimistic server model — failure-detection latency is not
-    simulated)."""
+    simulated). Injected crash/hang faults lose the client's update but
+    still charge its compute time to the barrier (under a barrier a hang is
+    a crash the server times out on); corruption kinds flow through to the
+    trainer hook and are defended (or not) by the round engine."""
 
     name = "sync"
 
@@ -275,11 +267,15 @@ class SyncAggregation:
         dropped = loop.dropouts(sel, r)
         cohort = [c for c in sel if c not in set(dropped)]
         times = loop.times(sel, r)
-        losses = loop.train_fn(cohort, r) if cohort else {}
+        sched = loop.fault_schedule(cohort, r)
+        losses, crashed = loop.run_train(cohort, r, schedule=sched)
+        survivors = [c for c in cohort if c not in set(crashed)]
+        # crashed clients spent their compute: the barrier waited on them
         dur = cohort_round_time([times[c] for c in cohort])
-        return RoundRecord(r, list(cohort), losses, dropped=dropped,
+        return RoundRecord(r, survivors, losses, dropped=dropped + crashed,
                            t_start=loop.clock, duration=dur,
-                           t_end=loop.clock + dur, policy=self.name)
+                           t_end=loop.clock + dur, policy=self.name,
+                           faults=dict(sched))
 
 
 @dataclass
@@ -320,16 +316,21 @@ class DeadlineAggregation:
         dropped = loop.dropouts(kept, r)
         cohort = [c for c in kept if c not in set(dropped)]
         seq = True if (straggler_round and self.sequential) else None
-        losses = loop.train_fn(cohort, r, sequential=seq) if cohort else {}
+        sched = loop.fault_schedule(cohort, r)
+        losses, crashed = loop.run_train(cohort, r, schedule=sched,
+                                         sequential=seq)
+        survivors = [c for c in cohort if c not in set(crashed)]
         late = [c for c in sel if c not in set(kept)]
         if late:  # server waited until the deadline before aggregating
             dur = float(deadline)
         else:
+            # crashed clients spent their compute before failing
             dur = cohort_round_time([times[c] for c in cohort])
-        return RoundRecord(r, list(cohort), losses, dropped=late + dropped,
+        return RoundRecord(r, survivors, losses,
+                           dropped=late + dropped + crashed,
                            t_start=loop.clock, duration=dur,
                            t_end=loop.clock + dur, policy=self.name,
-                           sequential=bool(seq))
+                           sequential=bool(seq), faults=dict(sched))
 
 
 @dataclass
@@ -353,11 +354,28 @@ class AsyncBufferedAggregation:
     Checkpoint note: the in-flight heap (which holds per-dispatch param
     snapshots) is deliberately NOT serialized — a resumed async run
     re-dispatches from the restored model/clock, so the bit-identical
-    resume guarantee applies to the sync and deadline policies."""
+    resume guarantee applies to the sync and deadline policies.
+
+    Fault tolerance (ISSUE 7): ``timeout_s`` arms a virtual-clock watchdog
+    per dispatch — an in-flight client whose completion has not landed by
+    ``t_dispatch + timeout_s * retry_backoff**attempt`` is abandoned and
+    re-dispatched from the CURRENT model (up to ``max_retries`` attempts,
+    exponential backoff on the watchdog), so an injected ``"hang"`` (a
+    completion that never arrives) can no longer stall a buffer slot
+    forever. Without a timeout a hung entry is parked: the pop loop skips
+    non-finite completion times and the tick returns short — the documented
+    starvation mode the watchdog exists to fix. ``"crash"`` spends the
+    client's compute and arrives as a loss-less failure (no merge);
+    corruption kinds are applied to the completed update host-side and a
+    non-finite screen at merge time (when the loop's injector is armed)
+    drops them instead of folding NaN into the running model."""
 
     buffer_size: int = 4
     concurrency: int = 8
     staleness_power: float = 0.5
+    timeout_s: Optional[float] = None
+    max_retries: int = 2
+    retry_backoff: float = 2.0
     name: str = "async"
 
     def tick(self, loop: "FederatedLoop", r: int) -> RoundRecord:
@@ -371,20 +389,72 @@ class AsyncBufferedAggregation:
         completed: List[int] = []
         losses: Dict[int, float] = {}
         staleness: Dict[int, int] = {}
+        dropped: List[int] = []
+        faulted: Dict[int, str] = {}
+        retries: Dict[int, int] = {}
         clock = t0
-        while len(merged) < self.buffer_size and st["in_flight"]:
-            t_fin, _, cid, base_p, base_s, v0 = heapq.heappop(st["in_flight"])
+        # bounded event budget: a retry storm (every slot hanging, every
+        # attempt timing out) must exhaust, not spin
+        events = 0
+        max_events = max(64, 16 * self.buffer_size
+                         + 4 * self.concurrency * (self.max_retries + 1))
+        while (len(merged) < self.buffer_size and st["in_flight"]
+               and events < max_events):
+            events += 1
+            entry = heapq.heappop(st["in_flight"])
+            key, _, cid, base_p, base_s, v0, t_disp, attempt, kind, t_fin = \
+                entry
+            if not np.isfinite(key):
+                # hung dispatch with no watchdog armed: nothing in flight
+                # can ever complete sooner — park it and return short
+                # rather than advance the clock to infinity
+                heapq.heappush(st["in_flight"], entry)
+                break
+            if kind:
+                faulted[cid] = kind
+            if key < t_fin:
+                # watchdog fired before completion: abandon this attempt
+                clock = max(clock, key)
+                if attempt < self.max_retries:
+                    retries[cid] = retries.get(cid, 0) + 1
+                    self._dispatch(loop, r, cid, clock,
+                                   attempt=attempt + 1)
+                else:
+                    dropped.append(cid)
+                    self._refill(loop, r, clock)
+                continue
+            clock = max(clock, t_fin)
+            if kind == "crash":
+                # compute spent, update lost — free the slot and move on
+                dropped.append(cid)
+                self._refill(loop, r, clock)
+                continue
             p_i, s_i, loss = loop.train_one_fn(cid, base_p, base_s, r)
+            if kind in CORRUPT_KINDS:
+                p_i = apply_fault_to_update(
+                    kind, base_p, p_i,
+                    amplify=loop.faults.amplify if loop.faults else 50.0)
+                if kind in ("nan", "inf"):
+                    loss = float("nan")
             stale = st["version"] - v0
             w = loop.client_weight(cid) * (1.0 + stale) ** -self.staleness_power
             delta = jax.tree.map(
                 lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
                 p_i, base_p)
+            if loop.faults is not None and not all(
+                    bool(np.isfinite(np.asarray(x)).all())
+                    for x in jax.tree.leaves(delta)):
+                # merge-time screen: never fold a non-finite delta into the
+                # running model (only armed alongside the injector — a
+                # clean run keeps the legacy merge arithmetic untouched)
+                dropped.append(cid)
+                losses[cid] = loss
+                self._refill(loop, r, clock)
+                continue
             merged.append((delta, s_i, w))
             completed.append(cid)
             losses[cid] = loss
             staleness[cid] = stale
-            clock = max(clock, t_fin)
             # backfill the freed slot immediately (at the completion time)
             self._refill(loop, r, clock)
         if merged:
@@ -407,9 +477,37 @@ class AsyncBufferedAggregation:
                                  agg_state)
             loop.set_model_fn(new_p, new_s)
             st["version"] += 1
-        return RoundRecord(r, completed, losses, t_start=t0,
-                           duration=clock - t0, t_end=clock,
-                           policy=self.name, staleness=staleness)
+        return RoundRecord(r, completed, losses, dropped=dropped,
+                           t_start=t0, duration=clock - t0, t_end=clock,
+                           policy=self.name, staleness=staleness,
+                           faults=faulted, retries=retries)
+
+    def _dispatch(self, loop: "FederatedLoop", r: int, cid: int, now: float,
+                  *, attempt: int = 0, times: Optional[Dict] = None,
+                  base=None):
+        """Push one in-flight entry. Heap key = min(completion, watchdog
+        deadline); a hang completes at +inf and only the watchdog (when
+        armed) can reclaim the slot. Retries re-draw the fault gate on a
+        per-attempt perturbed round index — a transient hang clears, a
+        persistently faulty client exhausts ``max_retries``."""
+        st = loop.async_state
+        if times is None:
+            times = loop.times([cid], r)
+        if base is None:
+            base = loop.snapshot_fn()
+        kind = None
+        if loop.faults is not None:
+            kind = loop.faults.schedule(
+                [cid], r if attempt == 0 else r + 7919 * attempt).get(cid)
+        t_fin = np.inf if kind == "hang" else now + times[cid]
+        key = t_fin
+        if self.timeout_s is not None:
+            key = min(t_fin, now + self.timeout_s
+                      * self.retry_backoff ** attempt)
+        st["seq"] += 1
+        heapq.heappush(st["in_flight"],
+                       (key, st["seq"], cid, base[0], base[1],
+                        st["version"], now, attempt, kind, t_fin))
 
     def _refill(self, loop: "FederatedLoop", r: int, now: float):
         st = loop.async_state
@@ -423,12 +521,9 @@ class AsyncBufferedAggregation:
             if not sel:
                 return
             times = loop.times(sel, r)
-            base_p, base_s = loop.snapshot_fn()
+            base = loop.snapshot_fn()
             for cid in sel:
-                st["seq"] += 1
-                heapq.heappush(st["in_flight"],
-                               (now + times[cid], st["seq"], cid,
-                                base_p, base_s, st["version"]))
+                self._dispatch(loop, r, cid, now, times=times, base=base)
 
 
 _POLICIES = {"sync": SyncAggregation, "deadline": DeadlineAggregation,
@@ -462,7 +557,10 @@ class FederatedLoop:
       train_fn(cohort, round_idx, *, sequential=None) -> {cid: mean loss}
           runs the engine dispatch AND applies the aggregate to the
           trainer's model state; ``sequential`` forwards the deadline
-          policy's straggler escape hatch.
+          policy's straggler escape hatch. With a ``faults`` injector
+          configured the hook is additionally called with
+          ``faults={cid: kind}`` on rounds where corruption fired (the
+          kwarg is omitted on clean rounds, so stub hooks keep working).
       on_round(RoundRecord) -> truthy to stop (pace freeze, budget, ...)
 
     Async hooks (only needed for ``AsyncBufferedAggregation``):
@@ -503,6 +601,7 @@ class FederatedLoop:
     aggregation: Union[str, Any] = "sync"
     time_model: Optional[FleetTimeModel] = None
     availability: Optional[AvailabilityTrace] = None
+    faults: Optional[FaultInjector] = None
     mesh: Any = None
     on_round: Optional[Callable[[RoundRecord], Optional[bool]]] = None
     snapshot_fn: Optional[Callable] = None
@@ -544,6 +643,36 @@ class FederatedLoop:
         if self.clients and cid in self.clients:
             return float(self.clients[cid].num_samples)
         return 1.0
+
+    def fault_schedule(self, cohort: Sequence[int],
+                       round_idx: int) -> Dict[int, str]:
+        """{cid: kind} from the configured ``FaultInjector`` ({} without
+        one). Order-independent, so policies may query any subset."""
+        if self.faults is None:
+            return {}
+        return self.faults.schedule(cohort, round_idx)
+
+    def run_train(self, cohort: Sequence[int], round_idx: int, *,
+                  schedule: Optional[Dict[int, str]] = None,
+                  **kw) -> Tuple[Dict[int, float], List[int]]:
+        """Train ``cohort`` through ``train_fn`` with this round's fault
+        schedule applied: crash/hang clients lose their update before it
+        reaches the server (returned as the ``crashed`` list), corruption
+        kinds are forwarded to the trainer hook via ``faults=...`` (only
+        when non-empty, so legacy two-arg hooks keep working unfaulted).
+        Returns ({cid: loss}, crashed)."""
+        cohort = list(cohort)
+        sched = self.fault_schedule(cohort, round_idx) \
+            if schedule is None else schedule
+        crashed = [c for c in cohort if sched.get(c) in ("crash", "hang")]
+        live = [c for c in cohort if sched.get(c) not in ("crash", "hang")]
+        if not live:
+            return {}, crashed
+        corrupt = {c: k for c, k in sched.items()
+                   if k in CORRUPT_KINDS and c in set(live)}
+        if corrupt:
+            kw = dict(kw, faults=corrupt)
+        return self.train_fn(live, round_idx, **kw), crashed
 
     # ----- driving -----
 

@@ -78,6 +78,32 @@ def main():
     report["round_uplink_equal"] = (e0.last_uplink_bytes
                                     == e1.last_uplink_bytes)
 
+    # --- update screening on the mesh: defenses armed + zero faults must be
+    # BIT-identical to the undefended sharded round (ISSUE 7 acceptance), and
+    # an injected nan update must be screened out with a finite aggregate that
+    # matches the single-device defended round ---
+    def tree_bytes(t):
+        return b"".join(np.asarray(x).tobytes() for x in jax.tree.leaves(t))
+
+    e0, active = engine(mesh)
+    e1, _ = engine(mesh, screen=True)
+    a0, s0, l0 = e0.run_round(by_id, sel, active, state, 3)
+    a1, s1, l1 = e1.run_round(by_id, sel, active, state, 3)
+    report["screened_zero_fault_bitwise"] = (tree_bytes(a0) == tree_bytes(a1)
+                                             and tree_bytes(s0) == tree_bytes(s1)
+                                             and l0 == l1)
+    ef, _ = engine(mesh, screen=True)
+    af, sf, lf = ef.run_round(by_id, sel, active, state, 3,
+                              faults={sel[0]: "nan"})
+    e2, _ = engine(None, screen=True)
+    a2, s2, l2 = e2.run_round(by_id, sel, active, state, 3,
+                              faults={sel[0]: "nan"})
+    report["screened_fault_finite"] = bool(all(
+        np.isfinite(np.asarray(x)).all() for x in jax.tree.leaves(af)))
+    report["screened_fault_matches_single"] = tree_close(af, a2)
+    report["screened_fault_flagged"] = (ef.last_screened[sel[0]] is True
+                                        and e2.last_screened[sel[0]] is True)
+
     # --- cohort smaller than the mesh: padding must not perturb Eq. 1 ---
     e0, active = engine(None)
     e1, _ = engine(mesh)

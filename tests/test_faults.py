@@ -1,0 +1,338 @@
+"""Fault tolerance (ISSUE 7): injection determinism, screening identity,
+durable checkpoints.
+
+Three layers:
+
+  * ``fl/faults.py`` — the deterministic schedule must be a pure function of
+    (seed, round, client id): independent of cohort iteration order, subset
+    membership, and call history;
+  * ``fl/engine.py`` + ``fl/server.py`` — with every defense armed and ZERO
+    faults injected, trajectories must be bit-for-bit identical to the
+    undefended run (f32, fused and sequential paths; the 8-device sharded
+    variant lives in tests/_shard_driver.py). With faults, corrupted updates
+    are screened out of Eq. 1 and the aggregate stays finite;
+  * ``checkpoint/ckpt.py`` — crc-verified restores fall back to the previous
+    committed step on corruption or torn directories, and async save
+    failures re-raise instead of masquerading as committed.
+"""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointCorruptError, CheckpointManager,
+                              latest_step, restore_checkpoint,
+                              save_checkpoint)
+from repro.core import freezing_cnn as fz
+from repro.core.pace import PaceController
+from repro.data.partition import dirichlet_partition
+from repro.data.synthetic import SyntheticVision
+from repro.fl.client import make_client_fleet
+from repro.fl.engine import RoundEngine
+from repro.fl.faults import FaultInjector, apply_fault_to_update, hash_draws
+from repro.fl.server import SmartFreezeServer, _mean_loss
+from repro.fl.sim import AsyncBufferedAggregation, FederatedLoop
+from repro.models.cnn import CNN, CNNConfig
+from repro.optim import sgd
+
+TINY = CNNConfig("tiny_resnet", "resnet", stage_sizes=(1, 1),
+                 stage_channels=(8, 16), num_classes=4)
+
+
+# ---------------------------------------------------------------------------
+# deterministic fault schedule
+# ---------------------------------------------------------------------------
+
+
+def test_schedule_order_and_subset_independent():
+    inj = FaultInjector(p_fault=0.4, kinds=("nan", "signflip", "crash"),
+                        seed=11)
+    cohort = list(range(40))
+    fwd = inj.schedule(cohort, 7)
+    rev = inj.schedule(list(reversed(cohort)), 7)
+    assert fwd == rev
+    # membership in the cohort must not perturb other clients' draws
+    sub = inj.schedule(cohort[::3], 7)
+    assert all(fwd.get(c) == sub.get(c) for c in cohort[::3])
+    # per-client single-draw API agrees with the batch API
+    assert all(inj.fault_for(c, 7) == fwd.get(c) for c in cohort)
+
+
+def test_schedule_history_independent_and_seeded():
+    a = FaultInjector(p_fault=0.5, kinds=("nan",), seed=3)
+    b = FaultInjector(p_fault=0.5, kinds=("nan",), seed=3)
+    # consume a in a different order than b — draws must not drift
+    a.schedule(range(10), 0)
+    a.schedule(range(10), 5)
+    assert a.schedule(range(10), 2) == b.schedule(range(10), 2)
+    c = FaultInjector(p_fault=0.5, kinds=("nan",), seed=4)
+    assert any(b.schedule(range(50), r) != c.schedule(range(50), r)
+               for r in range(4))
+
+
+def test_schedule_rate_and_start_round():
+    inj = FaultInjector(p_fault=0.3, kinds=("nan",), seed=0, start_round=5)
+    assert inj.schedule(range(100), 4) == {}
+    hits = sum(len(inj.schedule(range(100), r)) for r in range(5, 25))
+    assert 0.2 < hits / 2000 < 0.4
+    assert FaultInjector(p_fault=0.0, seed=0).schedule(range(100), 9) == {}
+
+
+def test_hash_draws_uniform():
+    u = hash_draws(0, 3, np.arange(4000))
+    assert u.shape == (4000,) and (0 <= u).all() and (u < 1).all()
+    assert abs(u.mean() - 0.5) < 0.03
+
+
+def test_apply_fault_kinds():
+    p0 = {"w": np.ones(4, np.float32)}
+    p1 = {"w": np.full(4, 3.0, np.float32)}
+    nan = apply_fault_to_update("nan", p0, p1)
+    assert np.isnan(np.asarray(nan["w"])).all()
+    inf = apply_fault_to_update("inf", p0, p1)
+    assert np.isinf(np.asarray(inf["w"])).all()
+    # signflip negates the DELTA around the round-start params
+    flip = apply_fault_to_update("signflip", p0, p1)
+    assert np.allclose(np.asarray(flip["w"]), -1.0)  # 1 - (3-1)
+    amp = apply_fault_to_update("amplify", p0, p1, amplify=10.0)
+    assert np.allclose(np.asarray(amp["w"]), 1 + 10 * 2.0)
+
+
+# ---------------------------------------------------------------------------
+# engine: screening identity + fault masking
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def world():
+    sv = SyntheticVision(num_classes=4, image_size=16, seed=0)
+    train = sv.sample(400, seed=1)
+    parts = dirichlet_partition(train["y"], 6, alpha=1.0, seed=0)
+    clients = make_client_fleet(train, parts, scenario="low", seed=0)
+    model = CNN(TINY)
+    params, state = model.init(jax.random.PRNGKey(0))
+    frozen, active = fz.init_cnn_stage_active(model, params, 0,
+                                              jax.random.PRNGKey(1))
+    return {c.client_id: c for c in clients}, model, frozen, active, state
+
+
+def _engine(model, frozen, **kw):
+    return RoundEngine(loss_fn=fz.cnn_stage_loss_fn(model, 0),
+                       optimizer=sgd(0.05), frozen=frozen, batch_size=32,
+                       local_epochs=1, **kw)
+
+
+def _tree_bytes(t):
+    return b"".join(np.asarray(x).tobytes() for x in jax.tree.leaves(t))
+
+
+@pytest.mark.parametrize("sequential", [False, True])
+def test_zero_fault_screening_bit_identity(world, sequential):
+    """All defenses on, no faults -> BIT-identical round (f32)."""
+    by_id, model, frozen, active, state = world
+    sel = sorted(by_id)[:4]
+    a0, s0, l0 = _engine(model, frozen).run_round(
+        by_id, sel, active, state, 3, sequential=sequential)
+    e1 = _engine(model, frozen, screen=True)
+    a1, s1, l1 = e1.run_round(by_id, sel, active, state, 3,
+                              sequential=sequential)
+    assert _tree_bytes(a0) == _tree_bytes(a1)
+    assert _tree_bytes(s0) == _tree_bytes(s1)
+    assert l0 == l1
+    assert e1.last_screened == {c: False for c in sel}
+
+
+@pytest.mark.parametrize("kind", ["nan", "inf", "amplify"])
+def test_corrupted_update_screened(world, kind):
+    by_id, model, frozen, active, state = world
+    sel = sorted(by_id)[:4]
+    e = _engine(model, frozen, screen=True)
+    a, s, losses = e.run_round(by_id, sel, active, state, 3,
+                               faults={sel[0]: kind})
+    assert e.last_screened[sel[0]] is True
+    assert not any(e.last_screened[c] for c in sel[1:])
+    for x in jax.tree.leaves((a, s)):
+        assert np.isfinite(np.asarray(x)).all()
+
+
+def test_signflip_needs_robust_aggregator(world):
+    """A sign-flipped delta is norm-preserving: the screen cannot see it,
+    the coordinate-median aggregator is the defense layer that can."""
+    by_id, model, frozen, active, state = world
+    sel = sorted(by_id)[:4]
+    e = _engine(model, frozen, screen=True)
+    e.run_round(by_id, sel, active, state, 3, faults={sel[0]: "signflip"})
+    assert e.last_screened[sel[0]] is False
+    er = _engine(model, frozen, aggregator="coord_median")
+    a, s, _ = er.run_round(by_id, sel, active, state, 3,
+                           faults={sel[0]: "nan"})
+    for x in jax.tree.leaves((a, s)):
+        assert np.isfinite(np.asarray(x)).all()
+
+
+def test_all_screened_round_is_noop(world):
+    by_id, model, frozen, active, state = world
+    sel = sorted(by_id)[:3]
+    e = _engine(model, frozen, screen=True)
+    a, s, _ = e.run_round(by_id, sel, active, state, 3,
+                          faults={c: "nan" for c in sel})
+    assert _tree_bytes(a) == _tree_bytes(active)
+    assert _tree_bytes(s) == _tree_bytes(state)
+
+
+def test_server_zero_fault_defended_bit_identity(world):
+    """Full SmartFreeze run, every defense armed, no injector: trajectory
+    must match the undefended server bit-for-bit (acceptance criterion)."""
+    by_id, model, frozen, active, state = world
+    clients = list(by_id.values())
+    params, st = model.init(jax.random.PRNGKey(0))
+
+    def run(**kw):
+        srv = SmartFreezeServer(model, clients, clients_per_round=4,
+                                batch_size=32, rounds_per_stage=2, seed=0,
+                                pace_kwargs=dict(min_rounds=99), **kw)
+        out = srv.run(params, st, schedule=[2, 2])
+        return out, srv
+
+    out0, srv0 = run()
+    out1, srv1 = run(screen_updates=True, freeze_rollback=True,
+                     faults=FaultInjector(p_fault=0.0))
+    assert _tree_bytes(out0["params"]) == _tree_bytes(out1["params"])
+    assert [r.loss for r in srv0.history] == [r.loss for r in srv1.history]
+    assert [r.selected for r in srv0.history] == \
+        [r.selected for r in srv1.history]
+    assert all(not r.screened and not r.rolled_back for r in srv1.history)
+
+
+# ---------------------------------------------------------------------------
+# sim: crash semantics + async watchdog
+# ---------------------------------------------------------------------------
+
+
+def test_sync_crash_drops_update_charges_time():
+    calls = []
+
+    def train_fn(cohort, r, sequential=None, faults=None):
+        calls.append(list(cohort))
+        return {c: 1.0 for c in cohort}
+
+    from repro.fl.sim import FleetTimeModel
+    tm = FleetTimeModel(client_ids=np.arange(5),
+                        compute_s=np.full(5, 2.0, np.float32),
+                        link_rate=np.full(5, np.inf, np.float32))
+    loop = FederatedLoop(select_fn=lambda r, a: a[:4], train_fn=train_fn,
+                         client_ids=[0, 1, 2, 3, 4], time_model=tm,
+                         faults=FaultInjector(p_fault=1.0, kinds=("crash",)))
+    rec = loop.run(1)[0]
+    assert rec.selected == [] and sorted(rec.dropped) == [0, 1, 2, 3]
+    assert rec.losses == {} and calls == []          # updates lost
+    assert rec.duration > 0                          # compute still spent
+    assert set(rec.faults) == {0, 1, 2, 3}
+
+
+def test_async_hang_watchdog_redispatches():
+    model = [{"w": np.float32(1.0)}]
+    pol = AsyncBufferedAggregation(buffer_size=2, concurrency=3,
+                                   timeout_s=5.0, max_retries=1)
+    loop = FederatedLoop(
+        select_fn=lambda r, a: a, train_fn=lambda *a, **k: {},
+        client_ids=[0, 1, 2, 3], aggregation=pol,
+        snapshot_fn=lambda: (model[0], {}),
+        train_one_fn=lambda cid, p, s, r: ({"w": p["w"] - 0.1}, {}, 0.5),
+        get_model_fn=lambda: (model[0], {}),
+        set_model_fn=lambda p, s: model.__setitem__(0, p),
+        faults=FaultInjector(p_fault=1.0, kinds=("hang",), seed=3))
+    recs = loop.run(2)
+    assert all(np.isfinite(r.t_end) for r in recs)   # clock never hangs
+    assert any(r.retries for r in recs)
+    assert np.isfinite(np.asarray(model[0]["w"])).all()
+
+
+def test_mean_loss_starved_round():
+    assert _mean_loss({1: 0.5, 2: 1.5}) == 1.0
+    assert _mean_loss({1: float("nan"), 2: 1.0}) == 1.0
+    assert _mean_loss({1: float("nan")}, prev=0.7) == 0.7
+    assert _mean_loss({}, prev=0.7) == 0.7
+
+
+def test_pace_rejects_nonfinite_observation():
+    pc = PaceController(window_q=3, smooth_h=2)
+    good = {"w": np.ones(4, np.float32)}
+    for i in range(4):
+        pc.observe(jax.tree.map(lambda x: x * (1 + 0.1 * i), good))
+    before = pc.history["smoothed"][-1]
+    out = pc.observe({"w": np.full(4, np.nan, np.float32)})
+    assert out == before                       # returns last smoothed value
+    assert pc.history["rounds"] == 4 and pc.history["skipped"] == 1
+    # round-trips through the checkpoint counters
+    pc2 = PaceController(window_q=3, smooth_h=2).load_state_dict(
+        pc.state_dict())
+    assert pc2.history["skipped"] == 1
+
+
+# ---------------------------------------------------------------------------
+# checkpoint durability
+# ---------------------------------------------------------------------------
+
+
+def _tree(v):
+    return {"a": np.full((2, 3), v, np.float32),
+            "b": {"c": np.arange(4, dtype=np.float32) + v}}
+
+
+def test_restore_falls_back_on_crc_mismatch(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _tree(1.0))
+    save_checkpoint(d, 2, _tree(2.0))
+    leaf = os.path.join(d, "step_2", "a.npy")
+    arr = np.load(leaf)
+    arr[0, 0] += 1.0
+    np.save(leaf, arr)
+    out = restore_checkpoint(d)
+    assert out["step"] == 1
+    assert np.array_equal(out["tree"]["a"], _tree(1.0)["a"])
+    with pytest.raises(CheckpointCorruptError):
+        restore_checkpoint(d, step=2)   # explicit step: no silent substitute
+
+
+def test_torn_step_dir_skipped(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _tree(1.0))
+    save_checkpoint(d, 2, _tree(2.0))
+    save_checkpoint(d, 3, _tree(3.0))
+    os.remove(os.path.join(d, "step_3", "manifest.json"))   # torn manifest
+    os.remove(os.path.join(d, "step_2", "a.npy"))           # torn leaf
+    assert latest_step(d) == 1
+    assert restore_checkpoint(d)["step"] == 1
+
+
+def test_manifest_without_crc_still_restores(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _tree(1.0))
+    man = os.path.join(d, "step_1", "manifest.json")
+    with open(man) as f:
+        m = json.load(f)
+    for e in m["leaves"]:
+        e.pop("crc32", None)            # pre-ISSUE-7 checkpoint layout
+    with open(man, "w") as f:
+        json.dump(m, f)
+    out = restore_checkpoint(d, step=1)
+    assert np.array_equal(out["tree"]["b"]["c"], _tree(1.0)["b"]["c"])
+
+
+def test_async_save_failure_reraises(tmp_path):
+    import shutil
+    d = str(tmp_path / "ck")
+    mgr = CheckpointManager(d, keep=2)
+    mgr.save(1, _tree(1.0))
+    mgr.wait()
+    shutil.rmtree(d)
+    with open(d, "w") as f:       # a FILE where the dir should be
+        f.write("x")
+    mgr.save(2, _tree(2.0))
+    with pytest.raises(RuntimeError, match="async checkpoint save failed"):
+        mgr.wait()
+    mgr.wait()                    # error is consumed, not sticky
+    os.remove(d)

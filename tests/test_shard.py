@@ -134,6 +134,16 @@ def test_sharded_round_matches_single_device(shard_report):
     assert shard_report["round_uplink_equal"]
 
 
+def test_sharded_screening(shard_report):
+    """ISSUE 7: defenses armed + zero faults is BIT-identical on the mesh;
+    an injected nan update is screened with a finite aggregate matching the
+    single-device defended round."""
+    assert shard_report["screened_zero_fault_bitwise"]
+    assert shard_report["screened_fault_finite"]
+    assert shard_report["screened_fault_matches_single"]
+    assert shard_report["screened_fault_flagged"]
+
+
 def test_cohort_smaller_than_mesh_padding(shard_report):
     assert shard_report["pad_params_allclose"]
     assert shard_report["pad_losses_allclose"]
