@@ -28,6 +28,11 @@ communities) are what reproduce the paper's tables.
                            clients, defenses on vs off; defended 30% within
                            ~2 points of clean, defenses-off diverges (emits
                            BENCH_fault_tolerance.json)
+  kernel_hotpaths          Pallas hot-path kernels vs lax references: fused
+                           int8-dequant GEMM + sparse cohort scatter-add,
+                           us/call + max err + compressed-round use_pallas
+                           parity (emits BENCH_kernel_hotpaths.json;
+                           BENCH_SMOKE=1 for the CI smoke)
 
 Run everything: ``python benchmarks/run.py``; or name a subset:
 ``python benchmarks/run.py round_engine fig10_memory``.
@@ -1035,6 +1040,114 @@ def fault_tolerance(rounds=16):
          + f";gap30={gap30:.3f};undef_diverged={diverged}")
 
 
+def kernel_hotpaths():
+    """Pallas hot-path kernels vs their lax references (ISSUE 10).
+
+    The two roofline-ordered additions to the fused round: the int8-dequant
+    GEMM that feeds tiered cache features to the first consumer matmul with
+    the scales applied in-register, and the sparse cohort scatter-add that
+    folds K clients' compressed uplinks in one kernel launch. Reports
+    us/call for kernel (interpret mode on CPU — a CORRECTNESS number, the
+    perf target is TPU Mosaic) vs reference, max abs error on the same
+    inputs, and the end-to-end use_pallas=True vs False parity of a fused
+    compressed round. Writes benchmarks/BENCH_kernel_hotpaths.json (the CI
+    artifact). BENCH_SMOKE=1 trims shapes and reps.
+    """
+    import jax, jax.numpy as jnp
+    from repro.fl import quant
+    from repro.fl.engine import make_fused_round
+    from repro.kernels import ops, ref
+    from repro.optim import sgd
+
+    smoke = bool(int(os.environ.get("BENCH_SMOKE", "0")))
+    reps = 2 if smoke else 3
+    rng = np.random.RandomState(0)
+
+    # --- fused int8-dequant GEMM ---
+    M, K, N = (64, 128, 64) if smoke else (192, 384, 128)
+    x = jnp.asarray(rng.randn(M, K) * 2.0, jnp.float32)
+    q, scale = quant.quantize_int8(x)
+    w = jnp.asarray(rng.randn(K, N) * 0.3, jnp.float32)
+    run_k = jax.jit(lambda: ops.dequant_matmul(
+        q, scale, w, block_m=64, block_n=64, block_k=64))
+    run_r = jax.jit(lambda: ref.dequant_matmul_ref(q, scale, w))
+    us_k = _timeit(lambda: run_k().block_until_ready(), n=reps)
+    us_r = _timeit(lambda: run_r().block_until_ready(), n=reps)
+    gemm_err = float(np.abs(np.asarray(run_k()) - np.asarray(run_r())).max())
+    gemm_ref_mag = float(np.abs(np.asarray(run_r())).max())
+    gemm_ok = gemm_err <= 1e-4 * max(1.0, gemm_ref_mag)
+
+    # --- sparse cohort scatter-add ---
+    Kc, topk, L = (4, 32, 1024) if smoke else (8, 64, 4096)
+    idx = jnp.asarray(rng.randint(0, L, size=(Kc, topk)), jnp.int32)
+    vals = jnp.asarray(rng.randn(Kc, topk), jnp.float32)
+    wts = jnp.asarray(rng.rand(Kc) + 0.1, jnp.float32)
+    agg_k = jax.jit(lambda: ops.sparse_cohort_add(idx, vals, wts, L))
+    agg_r = jax.jit(lambda: ref.sparse_cohort_add_ref(idx, vals, wts, L))
+    us_ak = _timeit(lambda: agg_k().block_until_ready(), n=reps)
+    us_ar = _timeit(lambda: agg_r().block_until_ready(), n=reps)
+    agg_err = float(np.abs(np.asarray(agg_k()) - np.asarray(agg_r())).max())
+    agg_ok = agg_err <= 1e-5 * max(1.0, float(np.abs(np.asarray(agg_r())).max()))
+
+    # --- end-to-end: fused compressed round, use_pallas vs XLA default ---
+    D, H, C, Kcl, nb, bs = 12, 8, 4, 3, 2, 8
+    params = {"w1": jnp.asarray(rng.randn(D, H) * 0.3, jnp.float32),
+              "w2": jnp.asarray(rng.randn(H, C) * 0.3, jnp.float32)}
+    batches = {"x": jnp.asarray(rng.randn(Kcl, nb, bs, D), jnp.float32),
+               "y": jnp.asarray(rng.randint(0, C, size=(Kcl, nb, bs)),
+                                jnp.int32)}
+    nb_live = jnp.full((Kcl,), nb, jnp.int32)
+    wcl = jnp.ones((Kcl,), jnp.float32) / Kcl
+    residuals = jax.tree.map(
+        lambda l: jnp.zeros((Kcl, l.size), jnp.float32), params)
+
+    def loss_fn(p, frozen, st, b):
+        h = jnp.tanh(b["x"] @ p["w1"])
+        logp = jax.nn.log_softmax(h @ p["w2"])
+        return -jnp.mean(jnp.take_along_axis(logp, b["y"][:, None], 1)), st
+
+    def round_us(use_pallas):
+        fn = make_fused_round(loss_fn, sgd(0.05), compress_ratio=0.3,
+                              unroll=True, use_pallas=use_pallas)
+        out = fn(params, {}, {}, batches, nb_live, wcl, residuals)
+        us = _timeit(lambda: jax.tree.leaves(
+            fn(params, {}, {}, batches, nb_live, wcl, residuals)[0]
+        )[0].block_until_ready(), n=reps)
+        return us, out
+
+    us_rp, out_p = round_us(True)
+    us_rx, out_x = round_us(False)
+    round_ok = all(np.allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32),
+                               rtol=1e-5, atol=1e-5)
+                   for a, b in zip(jax.tree.leaves(out_p[0]),
+                                   jax.tree.leaves(out_x[0])))
+
+    out = {"smoke": smoke,
+           "dequant_matmul": {"shape": [M, K, N], "pallas_us": us_k,
+                              "ref_us": us_r, "max_err": gemm_err,
+                              "allclose": gemm_ok},
+           "sparse_cohort_add": {"K": Kc, "topk": topk, "length": L,
+                                 "pallas_us": us_ak, "ref_us": us_ar,
+                                 "max_err": agg_err, "allclose": agg_ok},
+           "compressed_round": {"pallas_us": us_rp, "xla_us": us_rx,
+                                "params_allclose": round_ok},
+           "note": "interpret-mode timings on CPU gate correctness, not perf"}
+    path = os.path.join(os.path.dirname(__file__),
+                        "BENCH_kernel_hotpaths.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    assert gemm_ok, f"dequant GEMM err {gemm_err:.2e} vs mag {gemm_ref_mag:.2e}"
+    assert agg_ok, f"sparse fold err {agg_err:.2e}"
+    assert round_ok, "use_pallas compressed round != XLA round"
+    _row("kernel_hotpaths", us_k,
+         f"gemm[{M}x{K}x{N}]:pallas={us_k:.0f}us;ref={us_r:.0f}us;"
+         f"err={gemm_err:.1e};agg[K{Kc}xk{topk}->L{L}]:pallas={us_ak:.0f}us;"
+         f"ref={us_ar:.0f}us;err={agg_err:.1e};"
+         f"round:pallas={us_rp:.0f}us;xla={us_rx:.0f}us;"
+         f"parity={round_ok}")
+
+
 BENCHES = {}
 
 
@@ -1043,7 +1156,7 @@ def main() -> None:
         fig10_memory, speedup_time_model, fig9_rlcd, fig2_layer_convergence,
         kernels_microbench, round_engine, tab2_pace_ablation, tab1_fl_accuracy,
         selector_scale, sim_scale, cache_quant, shard_scale,
-        fault_tolerance)})
+        fault_tolerance, kernel_hotpaths)})
     names = sys.argv[1:] or list(BENCHES)
     unknown = [n for n in names if n not in BENCHES]
     if unknown:

@@ -50,6 +50,11 @@ class ArchConfig:
 
     # --- attention flavour ---
     attention: str = "gqa"  # gqa | mla
+    # full-sequence execution path: "xla" = dense einsum / blockwise online
+    # softmax (models/attention.py); "pallas" = kernels/flash_attention.py
+    # via kernels.ops (interpret-mode off-TPU). GQA only; opt-in via
+    # launch/train.py --use-pallas.
+    attention_impl: str = "xla"
     qkv_bias: bool = False
     rope_theta: float = 10000.0
 

@@ -86,26 +86,37 @@ def ingraph_topk(flat: jnp.ndarray, k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
 
 
 def ingraph_sparse_aggregate(idx: jnp.ndarray, vals: jnp.ndarray,
-                             weights: jnp.ndarray, length: int) -> jnp.ndarray:
+                             weights: jnp.ndarray, length: int,
+                             use_pallas: bool = False) -> jnp.ndarray:
     """Server-side Eq. 1 aggregation over K clients' sparse uplinks, as one
     scatter-add (segment-sum over the flat parameter index): dense [length]
     result without ever densifying per-client payloads on host.
 
-    idx/vals: [K, k] per-client sparse entries; weights: [K] normalized."""
+    idx/vals: [K, k] per-client sparse entries; weights: [K] normalized.
+    ``use_pallas`` routes through the single-launch cohort fold in
+    kernels/sparse_agg.py (same semantics, incl. duplicate-index
+    accumulation; the XLA scatter stays the default and the bit-compat
+    reference)."""
+    if use_pallas:
+        from repro.kernels import ops as kernel_ops
+        return kernel_ops.sparse_cohort_add(idx, vals, weights, length)
     contrib = (weights[:, None] * vals).reshape(-1)
     return jnp.zeros(length, jnp.float32).at[idx.reshape(-1)].add(contrib)
 
 
 def ingraph_compress_leaf(flat_start: jnp.ndarray, flat_end: jnp.ndarray,
                           residual: jnp.ndarray, weights: jnp.ndarray,
-                          ratio: float):
+                          ratio: float, use_pallas: bool = False):
     """One leaf of the fused compressed round: per-client delta + error
     feedback -> ``lax.top_k`` sparsify -> scatter-add aggregation.
 
     flat_start: [L] round-start params (f32); flat_end: [K, L] per-client
     trained params (f32); residual: [K, L] carried error-feedback state;
     weights: [K] normalized Eq. 1 weights. Returns (aggregated [L] f32,
-    new residual [K, L], idx [K, k], vals [K, k]).
+    new residual [K, L], idx [K, k], vals [K, k]). ``use_pallas`` selects
+    the Pallas cohort fold for the aggregation scatter only — selection and
+    error feedback are identical on both paths, so residual state never
+    diverges between them.
     """
     L = flat_start.shape[0]
     k = topk_keep(L, ratio)
@@ -114,7 +125,8 @@ def ingraph_compress_leaf(flat_start: jnp.ndarray, flat_end: jnp.ndarray,
     sent = jax.vmap(
         lambda i, v: jnp.zeros(L, jnp.float32).at[i].set(v))(idx, vals)
     new_residual = delta - sent
-    agg = flat_start + ingraph_sparse_aggregate(idx, vals, weights, L)
+    agg = flat_start + ingraph_sparse_aggregate(idx, vals, weights, L,
+                                                use_pallas=use_pallas)
     return agg, new_residual, idx, vals
 
 

@@ -48,7 +48,8 @@ from repro.dist.sharding import (CLIENT_AXIS, client_axis_size, replicate,
 from repro.fl.client import SimClient, batch_index_plan
 from repro.fl.faults import (CORRUPT_KINDS, FAULT_CODE, apply_fault_to_update,
                              corrupt_codes)
-from repro.fl.compression import (ingraph_compress_leaf, ingraph_topk,
+from repro.fl.compression import (ingraph_compress_leaf,
+                                  ingraph_sparse_aggregate, ingraph_topk,
                                   topk_keep)
 from repro.fl.quant import (CACHE_TIERS, EncodedFeatures, cast_floating,
                             encode_features, feature_batch_arrays,
@@ -235,7 +236,8 @@ def make_fused_round(loss_fn: LossFn, optimizer: Optimizer, *,
                      screen_norm_mult: float = 8.0,
                      aggregator: str = "mean", trim_beta: float = 0.2,
                      inject_faults: bool = False,
-                     fault_amplify: float = 50.0):
+                     fault_amplify: float = 50.0,
+                     use_pallas: bool = False):
     """Build the single-dispatch round function.
 
     A minimal round — two clients, one local SGD step each on a scalar
@@ -351,6 +353,18 @@ def make_fused_round(loss_fn: LossFn, optimizer: Optimizer, *,
     round) that corrupts the per-client deltas IN-GRAPH after local
     training, so injected corruption hits the screen exactly like a real
     byzantine update.
+
+    ``use_pallas=True`` routes the compressed-uplink Eq. 1 fold through the
+    Pallas cohort scatter-add kernel (kernels/sparse_agg.py): the vmap form
+    swaps the per-leaf XLA scatter for the single-launch fold, and the
+    unrolled CPU form collects every client's (idx, vals) rows and folds
+    the cohort in ONE kernel at the end of the round instead of K
+    incremental scatter dispatches. Selection math (top-k, error feedback)
+    is shared, so residual state is identical on both paths; the default
+    ``False`` keeps the exact pre-kernel XLA graphs (bit-compat escape
+    hatch). Not composed with ``mesh`` (the sharded fold joins per-device
+    partials via psum — a per-shard kernel would buy nothing and the
+    combination is untested; raises ValueError).
     """
     if aggregator not in AGGREGATORS:
         raise ValueError(f"unknown aggregator {aggregator!r}; "
@@ -367,6 +381,10 @@ def make_fused_round(loss_fn: LossFn, optimizer: Optimizer, *,
         raise ValueError("robust aggregators need the full cohort on one "
                          "device; use mesh=None with aggregator=" +
                          repr(aggregator))
+    if use_pallas and n_shards > 1:
+        raise ValueError("use_pallas does not compose with a sharded client "
+                         "mesh; use mesh=None (the sharded fold is psum-"
+                         "joined per shard)")
     if unroll is None:
         unroll = n_shards <= 1 and jax.default_backend() == "cpu"
     if n_shards > 1:
@@ -563,8 +581,13 @@ def make_fused_round(loss_fn: LossFn, optimizer: Optimizer, *,
         r_leaves = jax.tree.leaves(residuals)      # [K, leaf_size] each
         if unroll:
             # per-client incremental compress: only the [K, L] residual
-            # state (inherent to error feedback) outlives a client's turn
+            # state (inherent to error feedback) outlives a client's turn.
+            # use_pallas instead collects every client's (idx, vals) rows
+            # and folds the cohort in ONE sparse_agg kernel per leaf at the
+            # end — the [K, k] row stacks are the same wire payload the
+            # compressed uplink already carries, so no extra memory class.
             agg_acc = [jnp.zeros(p0.size, jnp.float32) for p0 in p_leaves]
+            sent_rows = [[] for _ in p_leaves]      # use_pallas: (idx, vals)
             new_r_rows = [[] for _ in p_leaves]
             agg_st = None
             losses = []
@@ -577,12 +600,22 @@ def make_fused_round(loss_fn: LossFn, optimizer: Optimizer, *,
                              + r_leaves[j][i])
                     idx, vals = ingraph_topk(
                         delta, topk_keep(p0.size, compress_ratio))
-                    agg_acc[j] = agg_acc[j].at[idx].add(w[i] * vals)
+                    if use_pallas:
+                        sent_rows[j].append((idx, vals))
+                    else:
+                        agg_acc[j] = agg_acc[j].at[idx].add(w[i] * vals)
                     # residual = delta - sent: the kept entries were
                     # transmitted exactly, so they zero out
                     new_r_rows[j].append(delta.at[idx].set(0.0))
                 agg_st = wsum(agg_st, st_i, w[i])
                 losses.append(loss_i)
+            if use_pallas:
+                agg_acc = [
+                    ingraph_sparse_aggregate(
+                        jnp.stack([i_ for i_, _ in rows]),
+                        jnp.stack([v_ for _, v_ in rows]), w, p0.size,
+                        use_pallas=True)
+                    for p0, rows in zip(p_leaves, sent_rows)]
             new_p = [(p0.astype(jnp.float32).reshape(-1) + acc)
                      .reshape(p0.shape).astype(p0.dtype)
                      for p0, acc in zip(p_leaves, agg_acc)]
@@ -599,7 +632,8 @@ def make_fused_round(loss_fn: LossFn, optimizer: Optimizer, *,
         for p0, pk, r in zip(p_leaves, jax.tree.leaves(out_p), r_leaves):
             agg_flat, r_new, _, _ = ingraph_compress_leaf(
                 p0.astype(jnp.float32).reshape(-1),
-                pk.astype(jnp.float32).reshape(K, -1), r, w, compress_ratio)
+                pk.astype(jnp.float32).reshape(K, -1), r, w, compress_ratio,
+                use_pallas=use_pallas)
             new_p.append(agg_flat.reshape(p0.shape).astype(p0.dtype))
             new_r.append(r_new)
         # mutable state (BN stats) stays a dense server-side average — only
@@ -868,6 +902,7 @@ class RoundEngine:
     aggregator: str = "mean"
     trim_beta: float = 0.2
     fault_amplify: float = 50.0
+    use_pallas: bool = False
     last_uplink_bytes: int = 0
     last_screened: Dict[int, bool] = field(default_factory=dict, repr=False)
     _features: Dict[int, EncodedFeatures] = field(default_factory=dict,
@@ -1103,7 +1138,8 @@ class RoundEngine:
         dequantization fused in-graph (fl/quant.make_tiered_loss)."""
         if tier is None:
             return self.loss_fn
-        return make_tiered_loss(self.cached_loss_fn, tier, self.compute_dtype)
+        return make_tiered_loss(self.cached_loss_fn, tier, self.compute_dtype,
+                                use_pallas=self.use_pallas)
 
     def _run_fused(self, clients, cids, params, state, round_idx, *, tier,
                    faults=None):
@@ -1144,6 +1180,8 @@ class RoundEngine:
         w_in = (np.concatenate([weights, np.zeros(pad, np.float32)])
                 if pad else weights)
         key = "fused" if tier is None else f"fused_cached_{tier}"
+        if self.use_pallas:
+            key += "|pallas"
         if defended:
             # an undefended engine round keeps the LEGACY compiled fn (and
             # its bit-exact trajectory); the defended build is keyed by its
@@ -1164,7 +1202,8 @@ class RoundEngine:
                                               else "mean"),
                                   trim_beta=self.trim_beta,
                                   inject_faults=codes is not None,
-                                  fault_amplify=self.fault_amplify)
+                                  fault_amplify=self.fault_amplify,
+                                  use_pallas=self.use_pallas)
             self._jit_cache[key] = fn
         cached = tier is not None
         frozen = {} if cached else (self.frozen if self.frozen is not None else {})
@@ -1266,6 +1305,7 @@ class RoundEngine:
         fn = self._jit_cache.get("seq_compress")
         if fn is None:
             ratio = self.compress_ratio
+            use_pallas = self.use_pallas
 
             def comp(params, p_i, res_leaves):
                 leaves, treedef = jax.tree.flatten(params)
@@ -1274,7 +1314,8 @@ class RoundEngine:
                     sent, r_new, _, _ = ingraph_compress_leaf(
                         p0.astype(jnp.float32).reshape(-1),
                         pi.astype(jnp.float32).reshape(1, -1), r[None, :],
-                        jnp.ones(1, jnp.float32), ratio)
+                        jnp.ones(1, jnp.float32), ratio,
+                        use_pallas=use_pallas)
                     new_p.append(sent.reshape(p0.shape).astype(p0.dtype))
                     new_r.append(r_new[0])
                 return jax.tree.unflatten(treedef, new_p), new_r

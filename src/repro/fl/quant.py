@@ -158,19 +158,59 @@ def feature_batch_arrays(enc: EncodedFeatures) -> Dict[str, np.ndarray]:
     return out
 
 
+def tiered_matmul(x, x_scale, w, *, use_pallas: bool = False):
+    """The leading GEMM of a quant-aware cached consumer: computes
+    ``dequant(x) @ w`` with the per-(sample, channel) scales applied
+    in-register (Pallas, kernels/dequant_matmul.py) or via the XLA
+    broadcast-multiply reference. ``x``: [N, D] int8 (or float) cache
+    features; ``x_scale``: broadcastable scales ([N, 1] from the 2-D
+    quantizer, or None for float tiers); ``w``: [D, H]. f32 out.
+
+    Differentiable wrt ``w`` (and ``x_scale``) on both paths — the Pallas
+    op carries a custom_vjp through the XLA reference, so cached local
+    training backprops exactly."""
+    if x_scale is None:
+        x_scale = jnp.ones((), jnp.float32)
+    if use_pallas:
+        from repro.kernels import ops as kernel_ops
+        return kernel_ops.dequant_matmul(x, x_scale, w)
+    xf = x.astype(jnp.float32) * jnp.asarray(x_scale).astype(jnp.float32)
+    return jax.lax.dot_general(xf, w.astype(jnp.float32),
+                               (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
 def make_tiered_loss(loss_fn, tier: Optional[str],
-                     compute_dtype: Optional[str] = None):
+                     compute_dtype: Optional[str] = None,
+                     use_pallas: bool = False):
     """Wrap a cached-consumer loss so the in-graph batch carries encoded
     features: int8 dequantizes (written inline so XLA fuses the broadcast
     multiply straight into the first consumer), fp16 upcasts; f32/None is
     the identity. The wrapper pops ``x_scale`` so downstream losses see the
     same batch keys as the f32 path. With ``compute_dtype`` set, the
     decoded features land in that dtype (the dequant arithmetic itself
-    stays f32 so the int8 scales are never degraded to bf16)."""
+    stays f32 so the int8 scales are never degraded to bf16).
+
+    Quant-aware consumers (``loss_fn.consumes_quantized`` truthy — losses
+    whose first op is a GEMM they route through ``tiered_matmul``) skip the
+    materializing dequant on the int8 tier: the batch keeps ``x`` int8 and
+    ``x_scale``, and with ``use_pallas`` the loss's ``tiered_matmul`` call
+    fuses the dequant into the GEMM in-register. Conv-first consumers (the
+    CNN cached stages) have no leading GEMM, so they always take the
+    materializing path — that dispatch rule is documented in
+    docs/ARCHITECTURE.md."""
     tier = normalize_tier(tier)
     if tier in (None, "f32"):
         return loss_fn
     out_dt = jnp.dtype(compute_dtype) if compute_dtype else jnp.float32
+
+    if tier == "int8" and getattr(loss_fn, "consumes_quantized", False):
+        def quant_aware(params, frozen, state, batch):
+            b = dict(batch)
+            b["use_pallas"] = use_pallas
+            return loss_fn(params, frozen, state, b)
+        quant_aware.consumes_quantized = True
+        return quant_aware
 
     def tiered(params, frozen, state, batch):
         b = dict(batch)

@@ -124,7 +124,8 @@ class SmartFreezeServer:
                  faults: Optional[FaultInjector] = None,
                  freeze_rollback: bool = False,
                  rollback_guard: float = 0.5, rollback_window: int = 8,
-                 rollback_patience: int = 2, max_rollbacks: int = 1):
+                 rollback_patience: int = 2, max_rollbacks: int = 1,
+                 use_pallas: bool = False):
         self.model = model
         self.clients = {c.client_id: c for c in clients}
         self.optimizer_fn = optimizer_fn
@@ -172,6 +173,10 @@ class SmartFreezeServer:
         self.rollback_window = rollback_window
         self.rollback_patience = rollback_patience
         self.max_rollbacks = max_rollbacks
+        # Pallas hot-path kernels (kernels/): compressed-uplink cohort fold
+        # + in-register int8 dequant GEMM for quant-aware cached losses.
+        # Default False = the exact XLA graphs (bit-compat escape hatch).
+        self.use_pallas = use_pallas
         self.rollbacks = 0                   # freeze rollbacks taken so far
         self.history: List[RoundResult] = []
         self.cache_tier_plan: Dict[int, Optional[str]] = {}  # current stage
@@ -224,7 +229,8 @@ class SmartFreezeServer:
             clip_norm=10.0, fused=self.fused,
             compress_ratio=self.compress_ratio,
             compute_dtype=self.compute_dtype, mesh=self.mesh,
-            screen=self.screen_updates, aggregator=self.aggregator)
+            screen=self.screen_updates, aggregator=self.aggregator,
+            use_pallas=self.use_pallas)
 
     def _cache_plan(self, stage: int) -> Dict[int, Optional[str]]:
         """Memory-model admission ladder (Eq. 12 per tier): walk
@@ -528,7 +534,8 @@ class FedAvgServer:
                  availability: Optional[AvailabilityTrace] = None,
                  mesh=None, screen_updates: bool = False,
                  aggregator: str = "mean",
-                 faults: Optional[FaultInjector] = None):
+                 faults: Optional[FaultInjector] = None,
+                 use_pallas: bool = False):
         self.model = model
         self.clients = {c.client_id: c for c in clients}
         self.optimizer_fn = optimizer_fn
@@ -550,6 +557,7 @@ class FedAvgServer:
         self.screen_updates = screen_updates
         self.aggregator = aggregator
         self.faults = faults
+        self.use_pallas = use_pallas
         self.history: List[RoundResult] = []
 
     def run(self, params, state, *, rounds: int, eval_fn=None, eval_every=10,
@@ -567,7 +575,8 @@ class FedAvgServer:
                              compress_ratio=self.compress_ratio,
                              compute_dtype=self.compute_dtype,
                              mesh=self.mesh, screen=self.screen_updates,
-                             aggregator=self.aggregator)
+                             aggregator=self.aggregator,
+                             use_pallas=self.use_pallas)
         rng = np.random.RandomState(self.seed)
         eligible = [cid for cid, c in self.clients.items()
                     if c.memory_bytes >= self.mem_required]

@@ -60,14 +60,24 @@ def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_scr, l_scr, acc_scr,
 def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                      length, *, scale: float = None, block_k: int = 1024,
                      interpret: bool = False) -> jnp.ndarray:
-    """q: [B, Hq, d]; k/v: [B, S, Hkv, d]; length: [B] int32 -> [B, Hq, dv]."""
+    """q: [B, Hq, d]; k/v: [B, S, Hkv, d]; length: [B] int32 -> [B, Hq, dv].
+
+    Ragged S zero-pads the cache axis up to block alignment — the kernel's
+    ``pos < length`` mask and block gate already ignore everything past the
+    valid prefix, so padding needs no kernel change. ``length == 0`` rows
+    (empty cache) return zeros: the gated body never runs, matching
+    ``ref.decode_attention_ref``."""
     B, Hq, dk = q.shape
     S, Hkv = k.shape[1], k.shape[2]
     dv = v.shape[-1]
     g = Hq // Hkv
     scale = scale if scale is not None else dk ** -0.5
     block_k = min(block_k, S)
-    assert S % block_k == 0
+    if S % block_k:
+        Sp = ((S + block_k - 1) // block_k) * block_k
+        pad = [(0, 0), (0, Sp - S), (0, 0), (0, 0)]
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        S = Sp
     grid = (B, Hq, S // block_k)
     kernel = functools.partial(_decode_kernel, scale=scale, block_k=block_k)
     return pl.pallas_call(

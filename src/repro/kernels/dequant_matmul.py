@@ -1,0 +1,155 @@
+"""Fused int8-dequant -> matmul — Pallas TPU kernel.
+
+The int8 frozen-prefix cache tier (fl/quant.py) stores features as int8
+values plus per-(sample, channel) f32 scales. The XLA path dequantizes by a
+broadcast multiply the compiler fuses into the consumer; this kernel goes
+one step further and applies the scales IN-REGISTER inside the GEMM inner
+loop, so the f32 feature tile exists only as a VMEM-resident [bm, bk] block
+and the dense f32 feature tensor is never written anywhere — the memory
+contract the SmartFreeze tier ladder prices (core/memory_model.py).
+
+Grid: (M/bm, N/bn, K/bk) with the contraction dim minor-most, so the f32
+VMEM accumulator persists across the k loop (same scratch-across-grid
+convention as flash_attention.py). Each step widens the int8 q tile to f32,
+multiplies the scale tile in, and feeds the MXU via ``lax.dot_general`` with
+``preferred_element_type=f32``.
+
+Scale layouts (static ``scale_kind``) mirror fl/quant._group_axes:
+
+  "row"  scale [M, 1] — 2-D feature rows (per-sample scale), the shape
+         ``quantize_int8`` emits for flattened [N, D] features;
+  "col"  scale [1, K] — per-input-channel scales (weight-style layouts);
+  "full" scale [M, K] — dense per-element scales (already-materialized
+         broadcast products; also the padding-safe general case).
+
+Ragged shapes are handled by the wrapper: q/w tails are zero-padded (zero
+rows/cols contribute nothing to the contraction), scale tails pad with 1.0,
+and the [M, N] result is sliced back out. float inputs (f32/bf16) take the
+same path — the kernel is then a plain scaled matmul, which is what the
+differential harness uses to isolate dtype effects.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SCALE_KINDS = ("row", "col", "full")
+
+
+def _dqmm_kernel(q_ref, s_ref, w_ref, o_ref, acc_scr, *, scale_kind: str):
+    kk = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[...].astype(jnp.float32)          # [bm, bk]
+    s = s_ref[...].astype(jnp.float32)          # [bm,1] | [1,bk] | [bm,bk]
+    q = q * s                                   # in-register dequant
+    w = w_ref[...].astype(jnp.float32)          # [bk, bn]
+    acc_scr[...] += jax.lax.dot_general(
+        q, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(kk == nk - 1)
+    def _finalize():
+        o_ref[...] = acc_scr[...].astype(o_ref.dtype)
+
+
+def _pad_to(x, axis, mult, value=0.0):
+    n = x.shape[axis]
+    rem = (-n) % mult
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def normalize_scale(scale, M: int, K: int):
+    """Classify a broadcastable scale into a static (scale_kind, 2-D array).
+
+    Accepts scalars/() (broadcast to a [1, K] col scale), [M, 1], [1, K] and
+    [M, K]. Higher-rank scales (e.g. the [N, 1, 1, C] maps the 4-D quantizer
+    emits) must be reshaped by the caller to the flattened GEMM layout —
+    raising here keeps the mapping explicit rather than guessing."""
+    scale = jnp.asarray(scale)
+    if scale.ndim == 0 or scale.shape in ((1,), (1, 1)):
+        return "col", jnp.broadcast_to(scale.reshape(()), (1, K))
+    if scale.ndim == 1:
+        if scale.shape[0] == K:
+            return "col", scale.reshape(1, K)
+        if scale.shape[0] == M:
+            return "row", scale.reshape(M, 1)
+    if scale.ndim == 2:
+        if scale.shape == (M, 1):
+            return "row", scale
+        if scale.shape == (1, K):
+            return "col", scale
+        if scale.shape == (M, K):
+            return "full", scale
+    raise ValueError(
+        f"scale shape {scale.shape} not broadcastable to q ({M}, {K}); "
+        "reshape higher-rank quantizer scales to the GEMM layout first")
+
+
+def dequant_matmul_fwd(q: jnp.ndarray, scale, w: jnp.ndarray, *,
+                       block_m: int = 256, block_n: int = 256,
+                       block_k: int = 256,
+                       out_dtype=jnp.float32,
+                       interpret: bool = False) -> jnp.ndarray:
+    """``(q.astype(f32) * scale) @ w`` without materializing the f32 q.
+
+    q: [M, K] int8 (or f32/bf16); scale broadcastable to q (see
+    ``normalize_scale``); w: [K, N] -> [M, N] ``out_dtype`` (f32 default;
+    accumulation is always f32)."""
+    assert q.ndim == 2 and w.ndim == 2 and q.shape[1] == w.shape[0], \
+        (q.shape, w.shape)
+    M, K = q.shape
+    N = w.shape[1]
+    scale_kind, scale = normalize_scale(scale, M, K)
+
+    bm = min(block_m, M)
+    bn = min(block_n, N)
+    bk = min(block_k, K)
+    qp = _pad_to(_pad_to(q, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w, 0, bk), 1, bn)
+    Mp, Kp = qp.shape
+    Np = wp.shape[1]
+    # padded q/w entries are zero, so any finite scale works in the tail;
+    # 1.0 keeps the dequant product exactly zero even for denormal tails.
+    if scale_kind == "row":
+        sp = _pad_to(scale, 0, bm, value=1.0)
+        s_spec = pl.BlockSpec((bm, 1), lambda i, j, kx: (i, 0))
+    elif scale_kind == "col":
+        sp = _pad_to(scale, 1, bk, value=1.0)
+        s_spec = pl.BlockSpec((1, bk), lambda i, j, kx: (0, kx))
+    else:
+        sp = _pad_to(_pad_to(scale, 0, bm, value=1.0), 1, bk, value=1.0)
+        s_spec = pl.BlockSpec((bm, bk), lambda i, j, kx: (i, kx))
+
+    grid = (Mp // bm, Np // bn, Kp // bk)
+    kernel = functools.partial(_dqmm_kernel, scale_kind=scale_kind)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kx: (i, kx)),
+            s_spec,
+            pl.BlockSpec((bk, bn), lambda i, j, kx: (kx, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kx: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.dtype(out_dtype)),
+        scratch_shapes=[_vmem((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(qp, sp, wp)
+    return out[:M, :N]
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

@@ -29,7 +29,12 @@ NEG_INF = -1e30
 
 
 def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-                      scale: float, causal: bool, block_q: int, block_k: int):
+                      scale: float, causal: bool, block_q: int, block_k: int,
+                      seq_len: int = None):
+    # seq_len (static) is set only when the wrapper zero-padded a ragged S:
+    # cols >= seq_len are masked and fully-padded kv blocks are skipped like
+    # causal skipping (an all-masked block would corrupt the online softmax:
+    # m stays NEG_INF and exp(s - m) = 1 inflates the denominator).
     qi = pl.program_id(2)
     kj = pl.program_id(3)
     nk = pl.num_programs(3)
@@ -50,6 +55,9 @@ def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
             rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
             cols = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
             s = jnp.where(rows >= cols, s, NEG_INF)
+        if seq_len is not None:
+            cols = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(cols < seq_len, s, NEG_INF)
         m_prev = m_scr[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
         p = jnp.exp(s - m_new[:, None])
@@ -59,11 +67,17 @@ def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
             p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
         m_scr[...] = m_new
 
+    run = None
     if causal:
         # dynamic structured skip: kv block strictly after the q block's end
-        pl.when(kj * block_k <= qi * block_q + block_q - 1)(_body)
-    else:
+        run = kj * block_k <= qi * block_q + block_q - 1
+    if seq_len is not None:
+        pad_skip = kj * block_k < seq_len
+        run = pad_skip if run is None else (run & pad_skip)
+    if run is None:
         _body()
+    else:
+        pl.when(run)(_body)
 
     @pl.when(kj == nk - 1)
     def _finalize():
@@ -75,7 +89,14 @@ def flash_attention_fwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                         causal: bool = True, scale: float = None,
                         block_q: int = 512, block_k: int = 512,
                         interpret: bool = False) -> jnp.ndarray:
-    """q: [B, S, Hq, d]; k/v: [B, S, Hkv, d]; Hq % Hkv == 0 -> [B, S, Hq, d]."""
+    """q: [B, S, Hq, d]; k/v: [B, S, Hkv, d]; Hq % Hkv == 0 -> [B, S, Hq, d].
+
+    Ragged S (not a multiple of the block shapes) is handled by zero-padding
+    the sequence axis up to ``lcm(block_q, block_k)`` alignment and masking
+    the padded key columns inside the kernel; padded query rows are sliced
+    off the output. A divisible S takes the exact pre-padding graph."""
+    import math
+
     B, S, Hq, dk = q.shape
     Hkv = k.shape[2]
     dv = v.shape[-1]
@@ -83,12 +104,19 @@ def flash_attention_fwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     scale = scale if scale is not None else dk ** -0.5
     block_q = min(block_q, S)
     block_k = min(block_k, S)
-    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    seq_len = None
+    if S % block_q or S % block_k:
+        align = math.lcm(block_q, block_k)
+        Sp = ((S + align - 1) // align) * align
+        pad = [(0, 0), (0, Sp - S), (0, 0), (0, 0)]
+        q, k, v = jnp.pad(q, pad), jnp.pad(k, pad), jnp.pad(v, pad)
+        seq_len, S = S, Sp
     grid = (B, Hq, S // block_q, S // block_k)
 
     kernel = functools.partial(_flash_fwd_kernel, scale=scale, causal=causal,
-                               block_q=block_q, block_k=block_k)
-    return pl.pallas_call(
+                               block_q=block_q, block_k=block_k,
+                               seq_len=seq_len)
+    out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -105,6 +133,7 @@ def flash_attention_fwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         ],
         interpret=interpret,
     )(q, k, v)
+    return out[:, :seq_len] if seq_len is not None else out
 
 
 def _vmem(shape, dtype):

@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import block_perturb, decode_attention as dec, flash_attention as fa
+from repro.kernels import dequant_matmul as dqmm
+from repro.kernels import sparse_agg
 from repro.kernels import ssm_scan as ssd
 from repro.kernels import ref
 
@@ -71,6 +73,58 @@ def update_sqnorm(tree_new, tree_old):
     """On-mesh half of the pace controller: fused ||new - old||^2."""
     return block_perturb.tree_diff_sqnorm(tree_new, tree_old,
                                           interpret=_default_interpret())
+
+
+# ----- fused int8-dequant matmul (differentiable wrt scale and w) -----
+
+
+def dequant_matmul(q, scale, w, *, block_m=256, block_n=256, block_k=256,
+                   out_dtype=jnp.float32, interpret=None):
+    """``(q.astype(f32) * scale) @ w`` with the per-(sample, channel) scales
+    applied in-register inside the GEMM (kernels/dequant_matmul.py).
+
+    ``q`` is cache DATA (int8 tier values) and is non-differentiable; the
+    custom_vjp carries gradients for ``scale`` and ``w`` by differentiating
+    the XLA reference (exact — same convention as ``flash_attention``'s
+    recompute backward). ``interpret=None`` -> container-aware default
+    (True off-TPU)."""
+    interpret = _default_interpret() if interpret is None else interpret
+
+    @jax.custom_vjp
+    def _fn(scale_, w_):
+        return dqmm.dequant_matmul_fwd(
+            q, scale_, w_, block_m=block_m, block_n=block_n, block_k=block_k,
+            out_dtype=out_dtype, interpret=interpret)
+
+    def _fwd(scale_, w_):
+        return _fn(scale_, w_), (scale_, w_)
+
+    def _bwd(res, g):
+        scale_, w_ = res
+        _, vjp = jax.vjp(
+            lambda s_, w2: ref.dequant_matmul_ref(q, s_, w2,
+                                                  out_dtype=out_dtype),
+            scale_, w_)
+        return vjp(g)
+
+    _fn.defvjp(_fwd, _bwd)
+    return _fn(scale, w)
+
+
+# ----- sparse cohort scatter-add (compressed-uplink Eq. 1 fold) -----
+
+
+def sparse_cohort_add(idx, vals, weights, length, *, interpret=None):
+    """One-kernel dense [length] fold of K clients' top-k (idx, vals) rows
+    (kernels/sparse_agg.py). Dispatch rule: leaves whose dense block exceeds
+    ``sparse_agg.MAX_VMEM_ELEMS`` fall back to the XLA scatter reference —
+    the kernel keeps the whole dense output VMEM-resident, so it is only
+    selected when that residency is possible."""
+    if length > sparse_agg.MAX_VMEM_ELEMS:
+        return ref.sparse_cohort_add_ref(idx, vals, weights, length)
+    interpret = _default_interpret() if interpret is None else interpret
+    return sparse_agg.sparse_cohort_add_fwd(idx, vals, weights, length,
+                                            interpret=interpret)
 
 
 # ----- int8 feature-cache quantization (reference entry) -----

@@ -22,7 +22,9 @@ def flash_attention_ref(q, k, v, *, causal=True, scale=None):
 
 
 def decode_attention_ref(q, k, v, length, *, scale=None):
-    """q: [B,Hq,d]; k/v: [B,S,Hkv,d]; length: [B]."""
+    """q: [B,Hq,d]; k/v: [B,S,Hkv,d]; length: [B]. Rows with length == 0
+    return zeros (nothing to attend to) — matching the Pallas kernel, whose
+    masked body never runs for an empty cache."""
     B, Hq, d = q.shape
     S = k.shape[1]
     g = Hq // k.shape[2]
@@ -33,7 +35,7 @@ def decode_attention_ref(q, k, v, length, *, scale=None):
                    k.astype(jnp.float32)) * scale
     valid = jnp.arange(S)[None, None, :] < length[:, None, None]
     s = jnp.where(valid, s, -1e30)
-    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(length[:, None, None] > 0, jax.nn.softmax(s, axis=-1), 0.0)
     return jnp.einsum("bhk,bkhd->bhd", p, v.astype(jnp.float32)).astype(q.dtype)
 
 
@@ -63,3 +65,22 @@ def ssd_scan_ref(x, dt, log_a, Bm, Cm):
 def diff_sqnorm_ref(a, b):
     d = a.astype(jnp.float32) - b.astype(jnp.float32)
     return jnp.sum(d * d)
+
+
+def dequant_matmul_ref(q, scale, w, *, out_dtype=jnp.float32):
+    """(q.astype(f32) * scale) @ w — the XLA broadcast-dequant GEMM that
+    kernels/dequant_matmul.py fuses. f32 accumulation on every input dtype."""
+    x = q.astype(jnp.float32) * jnp.asarray(scale).astype(jnp.float32)
+    return jax.lax.dot_general(
+        x, w.astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def sparse_cohort_add_ref(idx, vals, weights, length):
+    """Dense [length] f32 fold of K sparse client rows — the scatter-add in
+    fl.compression.ingraph_sparse_aggregate, restated here so kernels/ has
+    an import-independent oracle."""
+    contrib = (weights.astype(jnp.float32)[:, None]
+               * vals.astype(jnp.float32)).reshape(-1)
+    return jnp.zeros(length, jnp.float32).at[
+        idx.reshape(-1).astype(jnp.int32)].add(contrib)

@@ -1,0 +1,76 @@
+"""Sparse cohort scatter-add — Pallas TPU kernel for the compressed-uplink
+Eq. 1 fold (fl/engine.py / fl/compression.py).
+
+After top-k sparsification, each of K clients uploads (idx [k], vals [k])
+per leaf. The XLA path densifies via one ``.at[].add`` scatter over the
+[K*k] concatenation; this kernel folds the whole cohort in ONE launch:
+
+Grid: (K,) — TPU grids iterate sequentially per core, so the full dense
+[L] output block (constant index_map) stays VMEM-resident across client
+steps: zeroed at step 0, then each step streams one client's (idx, vals)
+row from HBM and read-modify-writes ``w_i * vals`` into it with dynamic
+``pl.ds`` single-element stores. Sequential grid execution makes duplicate
+indices — within a row or across clients — accumulate exactly like the
+reference scatter-add (no atomics needed).
+
+The dense block must fit VMEM, so the public wrapper (kernels/ops.py)
+falls back to the XLA scatter for leaves above ``MAX_VMEM_ELEMS`` — the
+documented dispatch rule (docs/ARCHITECTURE.md). FL leaves are per-stage
+tensors well under that bound in every config this repo ships.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# f32 elements per leaf the dense output block may occupy in VMEM (8 MiB of
+# the ~16 MiB budget, leaving room for the (idx, vals) row stream).
+MAX_VMEM_ELEMS = 1 << 21
+
+
+def _sparse_agg_kernel(idx_ref, val_ref, w_ref, o_ref, *, k: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = w_ref[0]
+
+    def body(j, _):
+        at = idx_ref[0, j]
+        cur = pl.load(o_ref, (pl.ds(at, 1),))
+        pl.store(o_ref, (pl.ds(at, 1),),
+                 cur + w * val_ref[0, j].astype(jnp.float32))
+        return _
+
+    jax.lax.fori_loop(0, k, body, 0)
+
+
+def sparse_cohort_add_fwd(idx: jnp.ndarray, vals: jnp.ndarray,
+                          weights: jnp.ndarray, length: int, *,
+                          interpret: bool = False) -> jnp.ndarray:
+    """Dense [length] f32 Eq. 1 fold of K sparse client rows.
+
+    idx: [K, k] int32 flat indices (duplicates allowed — they accumulate);
+    vals: [K, k]; weights: [K]. Exactly matches
+    ``fl.compression.ingraph_sparse_aggregate``."""
+    K, k = idx.shape
+    assert vals.shape == (K, k) and weights.shape == (K,), \
+        (idx.shape, vals.shape, weights.shape)
+    kernel = functools.partial(_sparse_agg_kernel, k=k)
+    return pl.pallas_call(
+        kernel,
+        grid=(K,),
+        in_specs=[
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((length,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((length,), jnp.float32),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), vals, weights.astype(jnp.float32))

@@ -48,7 +48,7 @@ def train(arch: str, *, reduced: bool = True, steps: int = 40, batch: int = 8,
           d_model: int = 0, num_layers: int = 0, log_every: int = 5,
           pace_kwargs: Optional[dict] = None, seed: int = 0,
           compute_dtype: Optional[str] = None,
-          mesh_clients: int = 0) -> dict:
+          mesh_clients: int = 0, use_pallas: bool = False) -> dict:
     cfg = configs.get(arch)
     mesh = None
     if mesh_clients and mesh_clients > 1:
@@ -84,6 +84,16 @@ def train(arch: str, *, reduced: bool = True, steps: int = 40, batch: int = 8,
         # mixed-precision tier knob: bf16 forward/backward per pod while the
         # Eq. 1 aggregation and checkpoint stream keep the param dtype
         cfg = dataclasses.replace(cfg, compute_dtype=compute_dtype)
+    if use_pallas:
+        # route GQA full-sequence attention through the Pallas flash kernel
+        # (kernels/flash_attention.py; interpret mode off-TPU). Roofline
+        # selection rationale: launch/roofline.py ranks attention as the
+        # top compute-bound hot path at LM scale. XLA stays the default.
+        if cfg.attention != "gqa":
+            raise SystemExit("--use-pallas: only the GQA attention flavour "
+                             f"has a Pallas kernel (arch uses "
+                             f"{cfg.attention!r})")
+        cfg = dataclasses.replace(cfg, attention_impl="pallas")
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(seed))
     T = cfg.num_freeze_blocks
@@ -235,12 +245,16 @@ def main():
                          "devices (launch.mesh.make_client_mesh); 0 = "
                          "single-device. On CPU, force host devices with "
                          "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="run GQA attention through the Pallas flash "
+                         "kernel (kernels/); default keeps the XLA path")
     a = ap.parse_args()
     out = train(a.arch, reduced=a.reduced, steps=a.steps, batch=a.batch,
                 seq=a.seq, local_steps=a.local_steps, num_pods=a.pods,
                 lr=a.lr, ckpt_dir=a.ckpt_dir, resume=a.resume, remat=a.remat,
                 d_model=a.d_model, num_layers=a.num_layers,
-                compute_dtype=a.compute_dtype, mesh_clients=a.mesh_clients)
+                compute_dtype=a.compute_dtype, mesh_clients=a.mesh_clients,
+                use_pallas=a.use_pallas)
     losses = [h["loss"] for h in out["history"]]
     if losses:
         print(f"finished: {len(losses)} rounds, "

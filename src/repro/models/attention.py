@@ -167,7 +167,14 @@ def gqa_forward(p: Params, x: jnp.ndarray, cfg: ArchConfig, *,
     v = _shard_heads(jnp.repeat(v, g, axis=2), batch_axes=cfg.batch_axes)
     q = _shard_heads(q, batch_axes=cfg.batch_axes)
     scale = 1.0 / float(np.sqrt(hd))
-    if S >= ATTN_BLOCK_THRESHOLD:
+    if getattr(cfg, "attention_impl", "xla") == "pallas":
+        # kernels/flash_attention.py via its differentiable ops wrapper
+        # (custom_vjp, recompute backward through the XLA reference). kv is
+        # already repeated to nq heads above, so the kernel runs with
+        # group size 1; interpret mode executes the body off-TPU.
+        from repro.kernels import ops as kernel_ops
+        out = kernel_ops.flash_attention(q, k, v, causal, scale)
+    elif S >= ATTN_BLOCK_THRESHOLD:
         out = blockwise_attention(q, k, v, causal=causal, scale=scale)
     else:
         scores = jnp.einsum("bsnh,btnh->bnst", q, k).astype(jnp.float32) * scale

@@ -21,6 +21,8 @@ import os
 import jax
 import numpy as np
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 from repro.checkpoint import (CheckpointCorruptError, CheckpointManager,
                               latest_step, restore_checkpoint,
@@ -336,3 +338,77 @@ def test_async_save_failure_reraises(tmp_path):
         mgr.wait()
     mgr.wait()                    # error is consumed, not sticky
     os.remove(d)
+
+
+# ---------------------------------------------------------------------------
+# robust-aggregator properties (hypothesis): _robust_leaf / _keep_mask
+# ---------------------------------------------------------------------------
+
+
+def _leaf_case(seed, K, shape=(5,)):
+    import jax.numpy as jnp
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.uniform(-1.0, 1.0, size=(K,) + shape), jnp.float32)
+    return x
+
+
+@settings(max_examples=10, deadline=None)
+@given(K=st.integers(3, 9), seed=st.integers(0, 1000),
+       agg=st.sampled_from(["coord_median", "trimmed_mean"]))
+def test_robust_leaf_permutation_invariant(K, seed, agg):
+    """Both combines are order statistics over the kept rows, so any client
+    permutation leaves the result BITWISE unchanged (the sort erases row
+    order) — cohort ordering can never leak into a robust aggregate."""
+    import jax.numpy as jnp
+    from repro.fl.engine import _robust_leaf
+    x = _leaf_case(seed, K)
+    keep = jnp.asarray(np.random.RandomState(seed + 1).rand(K) > 0.3)
+    keep = keep.at[0].set(True)  # at least one valid row
+    n_valid = jnp.sum(keep.astype(jnp.int32))
+    perm = np.random.RandomState(seed + 2).permutation(K)
+    a = _robust_leaf(x, keep, n_valid, agg, 0.2)
+    b = _robust_leaf(x[perm], keep[perm], n_valid, agg, 0.2)
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=10, deadline=None)
+@given(K=st.integers(4, 9), seed=st.integers(0, 1000),
+       agg=st.sampled_from(["coord_median", "trimmed_mean"]))
+def test_robust_leaf_bounded_under_minority_outliers(K, seed, agg):
+    """Breakdown property: with clean rows in [-1, 1] and a tolerable
+    minority of kept-but-corrupted rows at +-1e6 (fewer than half for the
+    median, at most floor(beta * n) for the trimmed mean), the aggregate
+    stays inside the clean envelope — the outliers are order-statistically
+    discarded, not averaged in."""
+    import jax.numpy as jnp
+    from repro.fl.engine import _robust_leaf
+    beta = 0.25
+    n_bad = ((K - 1) // 2 if agg == "coord_median"
+             else int(np.floor(beta * K)))
+    x = _leaf_case(seed, K)
+    rng = np.random.RandomState(seed + 3)
+    bad_rows = rng.choice(K, size=n_bad, replace=False)
+    for r in bad_rows:
+        x = x.at[r].set(1e6 * (1 if rng.rand() < 0.5 else -1))
+    keep = jnp.ones((K,), bool)
+    out = np.asarray(_robust_leaf(x, keep, jnp.asarray(K, jnp.int32),
+                                  agg, beta))
+    assert np.all(np.abs(out) <= 1.0 + 1e-6), (agg, n_bad, out)
+
+
+@settings(max_examples=10, deadline=None)
+@given(K=st.integers(2, 8), seed=st.integers(0, 1000))
+def test_keep_mask_zero_fault_identity(K, seed):
+    """The screening contract's unit form: all-finite losses and deltas
+    with norms under the median multiplier keep EVERY row, and masking the
+    Eq. 1 weights through the all-true mask is bitwise the identity."""
+    import jax.numpy as jnp
+    from repro.fl.engine import _keep_mask
+    rng = np.random.RandomState(seed)
+    norms = jnp.asarray(rng.uniform(0.5, 1.5, size=K), jnp.float32)
+    losses = jnp.asarray(rng.uniform(0.1, 3.0, size=K), jnp.float32)
+    weights = jnp.asarray(rng.rand(K) + 0.1, jnp.float32)
+    mask = _keep_mask(norms, losses, weights, mult=8.0)
+    assert bool(jnp.all(mask))
+    masked = jnp.where(mask, weights, 0.0)
+    assert np.array_equal(np.asarray(masked), np.asarray(weights))

@@ -137,3 +137,108 @@ def test_tree_diff_sqnorm():
     want = sum(float(ref.diff_sqnorm_ref(x, y)) for x, y in
                zip(jax.tree.leaves(t1), jax.tree.leaves(t2)))
     assert abs(got - want) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# ragged / adversarial differential fuzz (kernel wrappers vs refs)
+# ---------------------------------------------------------------------------
+
+pytestmark = pytest.mark.kernels
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    S=st.sampled_from([7, 65, 100, 130, 255]),
+    blocks=st.sampled_from([(32, 32), (64, 32), (32, 64)]),
+    causal=st.booleans(),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_flash_attention_ragged_seq(S, blocks, causal, dtype):
+    """S not a multiple of the block shapes: the wrapper zero-pads to
+    lcm(block_q, block_k) alignment and masks padded key columns in-kernel.
+    A fully-padded kv block must be SKIPPED (not just masked) or the online
+    softmax denominator is inflated by exp(0) rows — this sweep would catch
+    that corruption on every non-causal draw."""
+    bq, bk = blocks
+    q = _rand((2, S, 2, 16), dtype)
+    k = _rand((2, S, 2, 16), dtype)
+    v = _rand((2, S, 2, 16), dtype)
+    out = flash_attention_fwd(q, k, v, causal=causal, block_q=bq, block_k=bk,
+                              interpret=True)
+    expected = ref.flash_attention_ref(q, k, v, causal=causal)
+    assert out.shape == expected.shape
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expected, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_divisible_path_unchanged():
+    """When S divides both blocks, the wrapper must take the exact
+    pre-padding graph — same output as an explicitly padded call sliced
+    back, and bitwise equal to itself across calls (no data-dependent
+    branching)."""
+    q = _rand((1, 128, 2, 16), jnp.float32)
+    k = _rand((1, 128, 2, 16), jnp.float32)
+    v = _rand((1, 128, 2, 16), jnp.float32)
+    a = flash_attention_fwd(q, k, v, causal=True, block_q=64, block_k=32,
+                            interpret=True)
+    b = flash_attention_fwd(q, k, v, causal=True, block_q=64, block_k=32,
+                            interpret=True)
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    S=st.sampled_from([33, 100, 130]),
+    block_k=st.sampled_from([32, 64]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_decode_attention_ragged_cache(S, block_k, dtype):
+    """Cache lengths that are ragged relative to block_k, plus per-row
+    lengths shorter than the padded cache."""
+    B = 3
+    q = _rand((B, 4, 16), dtype)
+    k = _rand((B, S, 2, 16), dtype)
+    v = _rand((B, S, 2, 16), dtype)
+    length = jnp.asarray([S, max(1, S // 2), 1], jnp.int32)
+    out = decode_attention(q, k, v, length, block_k=block_k, interpret=True)
+    expected = ref.decode_attention_ref(q, k, v, length)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expected, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_decode_attention_zero_length_rows():
+    """length == 0 (empty cache row): the kernel's gated body never runs
+    and the row comes back all-zero — and the reference agrees (its softmax
+    is zeroed where length == 0, not NaN from an all-masked row)."""
+    B, S = 3, 64
+    q = _rand((B, 2, 16), jnp.float32)
+    k = _rand((B, S, 1, 16), jnp.float32)
+    v = _rand((B, S, 1, 16), jnp.float32)
+    length = jnp.asarray([0, S, 0], jnp.int32)
+    out = np.asarray(decode_attention(q, k, v, length, block_k=32,
+                                      interpret=True))
+    expected = np.asarray(ref.decode_attention_ref(q, k, v, length))
+    assert np.all(np.isfinite(expected))
+    assert np.all(out[0] == 0.0) and np.all(out[2] == 0.0)
+    np.testing.assert_allclose(out, expected, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=6, deadline=None)
+@given(n=st.sampled_from([5, 4097, 10001]),
+       magnitude=st.sampled_from([1e-20, 1.0, 1e15]))
+def test_diff_sqnorm_extreme_magnitudes(n, magnitude):
+    """block_perturb reduction under denormal-adjacent and huge inputs:
+    the f32 accumulator must track the reference within relative tol
+    (both saturate to inf together past f32 range)."""
+    a = _rand((n,), jnp.float32) * magnitude
+    b = _rand((n,), jnp.float32) * magnitude
+    got = float(diff_sqnorm(a, b, block=4096, interpret=True))
+    want = float(ref.diff_sqnorm_ref(a, b))
+    if np.isinf(want):
+        assert np.isinf(got)
+    else:
+        assert abs(got - want) <= 1e-4 * max(abs(want), 1e-30)

@@ -127,6 +127,7 @@ def shard_report():
     return report
 
 
+@pytest.mark.slow
 def test_sharded_round_matches_single_device(shard_report):
     assert shard_report["round_params_allclose"]
     assert shard_report["round_state_allclose"]
@@ -134,6 +135,7 @@ def test_sharded_round_matches_single_device(shard_report):
     assert shard_report["round_uplink_equal"]
 
 
+@pytest.mark.slow
 def test_sharded_screening(shard_report):
     """ISSUE 7: defenses armed + zero faults is BIT-identical on the mesh;
     an injected nan update is screened with a finite aggregate matching the
@@ -144,24 +146,29 @@ def test_sharded_screening(shard_report):
     assert shard_report["screened_fault_flagged"]
 
 
+@pytest.mark.slow
 def test_cohort_smaller_than_mesh_padding(shard_report):
     assert shard_report["pad_params_allclose"]
     assert shard_report["pad_losses_allclose"]
 
 
+@pytest.mark.slow
 def test_tiered_cache_sharded(shard_report):
     assert shard_report["tiered_cache_allclose"]
 
 
+@pytest.mark.slow
 def test_mixed_tier_groups_sharded(shard_report):
     assert shard_report["mixed_groups_allclose"]
 
 
+@pytest.mark.slow
 def test_compressed_sharded(shard_report):
     assert shard_report["compressed_allclose"]
     assert shard_report["compressed_uplink_equal"]
 
 
+@pytest.mark.slow
 def test_server_sharded_trajectory(shard_report):
     assert shard_report["server_picks_equal"]
     assert shard_report["server_uplink_equal"]
@@ -170,11 +177,13 @@ def test_server_sharded_trajectory(shard_report):
     assert shard_report["server_vtime_equal"]
 
 
+@pytest.mark.slow
 def test_population_sharded_kernels(shard_report):
     assert shard_report["population_picks_equal"]
     assert shard_report["admission_equal"]
 
 
+@pytest.mark.slow
 def test_population_nondivisible_fallback(shard_report):
     assert shard_report["nondiv_replicated"]
     assert shard_report["nondiv_admission_equal"]
